@@ -1,0 +1,87 @@
+"""Ablation: DyTC scheduling hyperparameters under the EWIF model.
+
+Sweeps the Eq.-5 objective over (k_max, alpha, c) grids to answer:
+  - how sensitive is the chosen draft length k* to the acceptance estimate?
+  - when does the admissible objective (Eq. 5) pick a DIFFERENT config than
+    the greedy objective (the paper's §4.2 motivation), and how much EWIF
+    does that recover?
+Closed-form + Monte-Carlo (no model execution — runs in seconds).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import ewif
+
+sys.path.insert(0, "benchmarks")
+from common import csv_line
+
+
+def optimal_k_surface():
+    out = {}
+    for alpha in (0.5, 0.7, 0.9):
+        for c in (0.1, 0.3, 0.5):
+            best = max(
+                range(1, 13),
+                key=lambda k: ewif.dytc_step_objective(alpha, c, k, 0.3, 0.01),
+            )
+            out[(alpha, c)] = best
+            print(csv_line(f"ablation/kstar/a={alpha}_c={c}", 0.0, f"k_star={best}"))
+    # k* must grow with alpha and shrink with c
+    assert out[(0.9, 0.1)] >= out[(0.5, 0.1)]
+    assert out[(0.9, 0.5)] <= out[(0.9, 0.1)]
+    return out
+
+
+def greedy_vs_admissible_gap():
+    """Fraction of (a1,c1,a2,c2) space where the schedulers disagree, and the
+    EWIF recovered by the admissible choice when they do."""
+    rng = np.random.default_rng(0)
+    disagree, gains = 0, []
+    trials = 400
+    for _ in range(trials):
+        a1, a2 = sorted(rng.uniform(0.3, 0.95, 2))[::-1]
+        c2, c1 = sorted(rng.uniform(0.05, 0.6, 2))
+        g1 = ewif.greedy_step_objective(a1, c1, 1)
+        g2 = ewif.greedy_step_objective(a2, c2, 1)
+        o1 = max(ewif.dytc_step_objective(a1, c1, k, 0.3, 0.01) for k in range(1, 8))
+        o2 = max(ewif.dytc_step_objective(a2, c2, k, 0.3, 0.01) for k in range(1, 8))
+        pick_greedy = 0 if g1 > g2 else 1
+        pick_adm = 0 if o1 > o2 else 1
+        if pick_greedy != pick_adm:
+            disagree += 1
+            # realized EWIF of each pick as standalone SD
+            t_greedy = ewif.best_sd(*( (a1, c1) if pick_greedy == 0 else (a2, c2)))[0]
+            t_adm = ewif.best_sd(*( (a1, c1) if pick_adm == 0 else (a2, c2)))[0]
+            gains.append(t_adm / t_greedy - 1.0)
+    frac = disagree / trials
+    mean_gain = float(np.mean(gains)) if gains else 0.0
+    print(csv_line("ablation/greedy_vs_eq5", 0.0,
+                   f"disagree_frac={frac:.3f};mean_ewif_gain_when_disagree={mean_gain:+.3f}"))
+    return {"disagree_frac": frac, "mean_gain": mean_gain}
+
+
+def tmin_sensitivity():
+    """Paper sets t_min=1.1: EWIF of stopping rules across acceptance mixes."""
+    for t_min in (1.0, 1.1, 1.5, 2.0):
+        # expected tree size before the stop rule triggers (alpha=0.7 chain)
+        alpha, a_dn, c_dn = 0.7, 0.3, 0.01
+        depth = 0
+        p = 1.0
+        while p * (a_dn / c_dn) >= t_min and depth < 32:
+            depth += 1
+            p *= alpha
+        print(csv_line(f"ablation/tmin={t_min}", 0.0, f"max_chain_depth={depth}"))
+
+
+def main() -> dict:
+    ks = optimal_k_surface()
+    gap = greedy_vs_admissible_gap()
+    tmin_sensitivity()
+    return {"k_star": {f"{a}/{c}": v for (a, c), v in ks.items()}, **gap}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 1b/1c: theoretical effective bound of the intermediate draft's cost
+coefficient c_d1 for VC / HC to beat SD-with-PLD alone.
+
+Reproduces the paper's numerical simulation: c_d2 = 0.01 (PLD-like bottom),
+alpha(M_t,M_d2) = alpha(M_d1,M_d2); sweep alpha(M_t,M_d1) and report the
+borderline c_d1 where max-hyperparameter cascade EWIF crosses max-k SD EWIF.
+The SWIFT data points from Spec-Bench mostly sit ABOVE the bound — the
+paper's motivation for DyTC (RQ1)."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import ewif
+
+sys.path.insert(0, "benchmarks")
+from common import csv_line
+
+# representative (alpha, c) of SWIFT on Spec-Bench (Fig. 1b reading)
+SWIFT_POINTS = [(0.55, 0.55), (0.6, 0.5), (0.65, 0.55), (0.7, 0.5)]
+
+
+def main() -> dict:
+    alphas = np.linspace(0.3, 0.95, 14)
+    alpha_d2 = 0.35                 # PLD-like acceptance
+    c_d2 = 0.01
+    vc, hc = [], []
+    for a1 in alphas:
+        b_vc = ewif.vc_bound_c_d1_numeric(a1, alpha_d2, alpha_d2, c_d2,
+                                          n_max=4, k_max=10)
+        b_hc = ewif.hc_bound_c_d1_numeric(a1, alpha_d2, c_d2, k_max=10)
+        vc.append(b_vc)
+        hc.append(b_hc)
+        print(csv_line(f"fig1/alpha={a1:.2f}", 0.0,
+                       f"vc_bound={b_vc:.3f};hc_bound={b_hc:.3f}"))
+    # bounds increase with alpha_d1 (better drafts tolerate higher cost)
+    assert all(b2 >= b1 - 1e-6 for b1, b2 in zip(hc, hc[1:]))
+    above = sum(
+        1 for a, c in SWIFT_POINTS
+        if c > ewif.hc_bound_c_d1_numeric(a, alpha_d2, c_d2, k_max=10)
+    )
+    print(csv_line("fig1/swift_points_above_bound", 0.0,
+                   f"count={above}/{len(SWIFT_POINTS)}"))
+    return {"alphas": list(alphas), "vc": vc, "hc": hc, "swift_above": above}
+
+
+if __name__ == "__main__":
+    main()

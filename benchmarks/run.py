@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig3] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+
+    import ablation_dytc
+    import fig1_bounds
+    import fig3_methods
+    import table1_speedup
+    import table2_accepted
+
+    suites = {
+        "fig1": lambda: fig1_bounds.main(),
+        "ablation": lambda: ablation_dytc.main(),
+        "table1": lambda: table1_speedup.main(args.tokens),
+        "table2": lambda: table2_accepted.main(args.tokens),
+        "fig3": lambda: fig3_methods.main(args.tokens),
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        print(f"### {name}")
+        t0 = time.time()
+        results[name] = fn()
+        print(f"### {name} done in {time.time()-t0:.1f}s")
+    with open(os.path.join(args.out, "bench.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Compiled-artifact analysis: roofline terms + HLO collective accounting."""
+from repro.analysis.roofline import RooflineReport, analyze_compiled, collective_bytes
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes"]

@@ -1,0 +1,179 @@
+"""Trip-count-aware HLO cost accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, not
+multiplied by its trip count (verified empirically — a scan of 10 matmuls
+reports the flops of 1). Since the layer stack lowers as lax.scan and the
+attention streams KV chunks with inner scans, both the FLOPs and the
+collective bytes would be underestimated by up to ~num_layers x num_chunks.
+
+This module parses ``compiled.as_text()`` into a computation call graph,
+multiplies through ``known_trip_count`` annotations on while ops, and sums:
+  - dot FLOPs (2 x prod(result_shape) x prod(contracted lhs dims))
+  - collective result bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute)
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_OP_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DOT = re.compile(
+    r"dot\(\s*%([\w\.\-]+),\s*%([\w\.\-]+)\)"
+)
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_TO = re.compile(r"to_apply=%?([\w\.\-]+)|\bto=%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_PARAM = re.compile(r"([\w\.\-]+):\s*([a-z][a-z0-9]*\[[0-9,]*\])")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _first_shape(text: str) -> Tuple[str, List[int]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return "f32", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _all_shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.coll: Dict[str, float] = {}
+        # (callee, multiplier)
+        self.calls: List[Tuple[str, float]] = []
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Computation = None
+    shapes: Dict[str, Tuple[str, List[int]]] = {}
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hm = _COMP_HEADER.match(line)
+        if hm:
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            shapes = {}
+            # parameter shapes from the header
+            for pname, pshape in _PARAM.findall(line):
+                shapes[pname] = _first_shape(pshape)
+            continue
+        if cur is None:
+            continue
+        om = _OP_DEF.match(line)
+        if not om:
+            continue
+        opname, rest = om.groups()
+        # record result shape: the first shape token on the RHS (or tuple)
+        shapes[opname] = _first_shape(rest)
+
+        if " dot(" in rest or rest.startswith("dot("):
+            dm = _DOT.search(rest)
+            if dm:
+                lhs = dm.group(1)
+                res_dt, res_dims = _first_shape(rest.split(" dot(")[0] if " dot(" in rest else rest)
+                cd = _LHS_CDIMS.search(rest)
+                cdims = [int(d) for d in cd.group(1).split(",") if d] if cd else []
+                lhs_shape = shapes.get(lhs, ("f32", []))[1]
+                k = 1
+                for d in cdims:
+                    if d < len(lhs_shape):
+                        k *= lhs_shape[d]
+                n = 1
+                for d in res_dims:
+                    n *= d
+                cur.flops += 2.0 * n * k
+        for kind in COLLECTIVES:
+            if f" {kind}(" in rest or rest.startswith(f"{kind}("):
+                # result bytes (tuple-aware): everything before the op name
+                head = rest.split(kind + "(")[0]
+                cur.coll[kind] = cur.coll.get(kind, 0) + _all_shapes_bytes(head)
+                break
+
+        if "while(" in rest:
+            bm = _BODY.search(rest)
+            cm = _COND.search(rest)
+            tm = _TRIP.search(rest)
+            trip = float(tm.group(1)) if tm else 1.0
+            if bm:
+                cur.calls.append((bm.group(1), trip))
+            if cm:
+                cur.calls.append((cm.group(1), trip + 1))
+        elif "fusion(" in rest or "custom-call" in rest:
+            km = _CALLS.search(rest)
+            if km:
+                cur.calls.append((km.group(1), 1.0))
+        elif "conditional(" in rest:
+            brm = _BRANCHES.search(rest)
+            if brm:
+                for b in brm.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        cur.calls.append((b, 1.0))   # upper bound: all branches
+        elif " call(" in rest or rest.startswith("call("):
+            tm2 = _TO.search(rest)
+            if tm2:
+                callee = tm2.group(1) or tm2.group(2)
+                cur.calls.append((callee, 1.0))
+    comps["__entry__"] = comps.get(entry, Computation("__none__"))
+    return comps
+
+
+def total_costs(text: str) -> dict:
+    comps = parse_hlo(text)
+    memo: Dict[str, Tuple[float, Dict[str, float]]] = {}
+
+    def visit(name: str, stack=()) -> Tuple[float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0, {}
+        c = comps[name]
+        fl = c.flops
+        co = dict(c.coll)
+        for callee, mult in c.calls:
+            cf, cc = visit(callee, stack + (name,))
+            fl += mult * cf
+            for k, v in cc.items():
+                co[k] = co.get(k, 0.0) + mult * v
+        memo[name] = (fl, co)
+        return memo[name]
+
+    entry = comps["__entry__"].name
+    fl, co = visit(entry)
+    return {"flops": fl, "collective_bytes": co,
+            "coll_total": float(sum(co.values()))}

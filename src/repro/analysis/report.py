@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md roofline tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.config import get_config
+
+CHIPS = {"1pod": 256, "2pod": 512}
+
+
+def model_flops_per_step(arch: str, kind: str, seq: int, batch: int, draft_t: int = 8) -> float:
+    """MODEL_FLOPS: 6·N·D (train, dense) / 6·N_active·D (MoE); inference
+    2·N_active·tokens."""
+    cfg = get_config(arch)
+    n_active = cfg.active_param_count()
+    tokens = batch * seq
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * batch * draft_t      # decode: T staged tokens
+
+
+SHAPES = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+          "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def load(dirname: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def render(rows, mesh="1pod") -> str:
+    out = []
+    out.append(
+        "| arch | shape | bottleneck | t_comp (ms) | t_mem (ms) | t_coll (ms) "
+        "| FLOPs/dev | HBM GiB/dev | coll GB/dev | useful-FLOP ratio | fits? |"
+    )
+    out.append("|---|---|---|---:|---:|---:|---:|---:|---:|---:|---|")
+    for r in rows:
+        if r.get("status") != "ok" or r["mesh"] != ("16x16" if mesh == "1pod" else "2x16x16"):
+            continue
+        rf = r["roofline"]
+        seq, batch = SHAPES[r["shape"]]
+        mf = model_flops_per_step(r["arch"], r["kind"], seq, batch)
+        chips = CHIPS[mesh]
+        ratio = mf / chips / max(rf["flops"], 1.0)
+        mem = r["memory_analysis"]
+        # CPU-backend compiles upcast every bf16 buffer to f32 (verified in
+        # the buffer assignment); the TPU estimate halves temp accordingly.
+        peak = (mem["argument_bytes"] + mem["temp_bytes"] / 2) / 2 ** 30
+        fits = "yes" if peak <= 16 else f"NO ({peak:.0f}GiB)"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{rf['bottleneck']}** "
+            f"| {rf['t_compute']*1e3:.2f} | {rf['t_memory']*1e3:.2f} "
+            f"| {rf['t_collective']*1e3:.2f} | {rf['flops']:.2e} "
+            f"| {rf['bytes_hbm']/2**30:.2f} | {rf['coll_bytes'] and sum(rf['coll_bytes'].values())/1e9 or 0:.2f} "
+            f"| {min(ratio, 9.99):.2f} | {fits} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="1pod")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(render(rows, args.mesh))
+    skips = [r for r in rows if r.get("status") == "skipped"]
+    if skips:
+        print("\nSkipped (documented in DESIGN.md §Arch-applicability):")
+        for r in skips:
+            print(f"- {r['arch']} x {r['shape']}: {r['reason']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD) program, so
+"/(chips)" is already applied — we verify this invariant in tests against
+analytic 6·N·D. collective_bytes is not in cost_analysis: we parse the HLO
+text and sum output-shape bytes of every collective op.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result bytes per collective kind (proxy for moved bytes).
+
+    NOT trip-count aware — see analysis.hlo_costs for the corrected totals;
+    this helper is kept for quick flat-HLO inspection.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            marker = f" {kind}("
+            if marker in line and "=" in line.split(marker)[0]:
+                head = line.split(marker)[0].split("=", 1)[1]
+                for dtype, dims in _SHAPE_RE.findall(head):
+                    out[kind] += _shape_bytes(dtype, dims)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    flops: float                 # per-device, trip-count corrected (HLO dots)
+    bytes_hbm: float             # per-device (max of analytic-min and XLA)
+    coll_bytes: Dict[str, int]   # per-device, by kind, trip-count corrected
+    peak_memory: Optional[float] = None   # bytes/device from memory_analysis
+    flops_xla: float = 0.0       # raw cost_analysis (loop bodies counted once)
+    bytes_xla: float = 0.0       # raw cost_analysis
+    bytes_analytic: float = 0.0  # parameter+cache+activation traffic model
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Memory term from the ANALYTIC traffic model (params + cache +
+        activation streams per device). XLA's 'bytes accessed' is reported
+        alongside (bytes_xla) but not used: it counts loop bodies once,
+        counts functional scatters as full read+write even when aliased
+        in-place, and on the CPU backend includes f32 upcast copies of
+        every bf16 buffer (verified in the buffer assignment — TPU keeps
+        bf16 native)."""
+        return (self.bytes_analytic or self.bytes_hbm) / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_total / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "flops": self.flops,
+            "flops_xla": self.flops_xla,
+            "bytes_hbm": self.bytes_hbm,
+            "bytes_xla": self.bytes_xla,
+            "bytes_analytic": self.bytes_analytic,
+            "coll_bytes": self.coll_bytes,
+            "peak_memory": self.peak_memory,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze_compiled(name: str, compiled, analytic_bytes: float = 0.0) -> RooflineReport:
+    """Roofline terms from a compiled executable.
+
+    FLOPs and collective bytes come from the trip-count-corrected HLO parse
+    (repro.analysis.hlo_costs) — XLA's cost_analysis counts while bodies
+    once. The memory term is max(analytic traffic model, XLA bytes): XLA
+    under-counts loops, the analytic model is the data-movement minimum.
+    """
+    from repro.analysis.hlo_costs import total_costs
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    flops_xla = float(cost.get("flops", 0.0))
+    bytes_xla = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    parsed = total_costs(hlo) if hlo else {"flops": 0.0, "collective_bytes": {}}
+    coll = {k: int(v) for k, v in parsed["collective_bytes"].items()}
+    flops = max(parsed["flops"], flops_xla)
+    bytes_hbm = max(analytic_bytes, bytes_xla)
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(
+            ma.temp_size_in_bytes + ma.argument_size_in_bytes + ma.output_size_in_bytes
+        )
+    except Exception:
+        pass
+    return RooflineReport(
+        name, flops, bytes_hbm, coll, peak,
+        flops_xla=flops_xla, bytes_xla=bytes_xla, bytes_analytic=analytic_bytes,
+    )

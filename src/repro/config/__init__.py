@@ -1,0 +1,31 @@
+"""Typed configuration system for repro.
+
+`ModelConfig` is the single source of truth for an architecture; configs are
+registered by id in `repro.configs` and selected with ``--arch <id>``.
+"""
+from repro.config.base import (
+    AttentionKind,
+    BlockKind,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+    register_config,
+)
+from repro.config.shapes import INPUT_SHAPES, get_shape
+
+__all__ = [
+    "AttentionKind",
+    "BlockKind",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "get_config",
+    "list_configs",
+    "register_config",
+    "INPUT_SHAPES",
+    "get_shape",
+]

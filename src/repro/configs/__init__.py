@@ -1,0 +1,32 @@
+"""Architecture registry — importing this package registers every config.
+
+Assigned pool (10 archs) + the paper's own Vicuna/Llama-7B-class target.
+"""
+from repro.configs import (  # noqa: F401
+    gemma3_1b,
+    internlm2_20b,
+    jamba_v0_1_52b,
+    llava_next_mistral_7b,
+    mamba2_130m,
+    mixtral_8x22b,
+    musicgen_medium,
+    qwen2_moe_a2_7b,
+    stablelm_1_6b,
+    starcoder2_3b,
+    vicuna_7b,
+)
+
+ASSIGNED_ARCHS = [
+    "mixtral-8x22b",
+    "llava-next-mistral-7b",
+    "stablelm-1.6b",
+    "qwen2-moe-a2.7b",
+    "jamba-v0.1-52b",
+    "starcoder2-3b",
+    "gemma3-1b",
+    "mamba2-130m",
+    "musicgen-medium",
+    "internlm2-20b",
+]
+
+PAPER_ARCHS = ["vicuna-7b"]

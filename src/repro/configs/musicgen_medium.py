@@ -1,0 +1,26 @@
+"""MusicGen-medium — decoder-only LM over EnCodec tokens. [arXiv:2306.05284]
+
+4 codebooks with the delay interleave pattern; the EnCodec conv codec is a
+stub per spec — ``input_specs`` supplies the (B, S, 4) code indices, the
+backbone sums 4 codebook embeddings per step and predicts 4 heads.
+"""
+from repro.config.base import ModelConfig, register_config
+
+
+@register_config("musicgen-medium")
+def musicgen_medium() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        source="[arXiv:2306.05284] Simple and Controllable Music Generation (MusicGen)",
+        num_layers=48,
+        d_model=1536,
+        num_heads=24,
+        num_kv_heads=24,           # MHA (kv=24)
+        d_ff=6144,
+        vocab_size=2048,           # EnCodec codebook size
+        attention_pattern="full",
+        num_codebooks=4,
+        act="gelu",
+        mlp_gated=False,
+    )

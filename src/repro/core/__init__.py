@@ -1,0 +1,33 @@
+"""CAS-Spec core: the paper's contribution.
+
+  ewif        — EWIF theory (§3, App. B)
+  pld         — Prompt Lookup bottom draft model
+  acceptance  — EMA acceptance tracking (Eq. 4)
+  latency     — BLR latency model over roofline features
+  dsia        — DSIA strategies / draft hierarchy (§4.1)
+  tree        — draft token tree + dense tree masks
+  verify      — lossless greedy / speculative-sampling verification
+  cascade     — static VC/HC/tree baselines (CS-Drafting, SWIFT-tree)
+  dytc        — Dynamic Tree Cascade (Alg. 1+2)
+  engine      — SpecEngine runtime (stage-then-commit)
+"""
+from repro.core.acceptance import AcceptanceTracker
+from repro.core.dsia import DraftSpec, PLD_SPEC, build_hierarchy, early_exit, layer_sparsity
+from repro.core.dytc import DyTCConfig, DyTCScheduler
+from repro.core.engine import SpecEngine
+from repro.core.pld import PromptLookup
+from repro.core.tree import DraftTree
+
+__all__ = [
+    "AcceptanceTracker",
+    "DraftSpec",
+    "PLD_SPEC",
+    "build_hierarchy",
+    "early_exit",
+    "layer_sparsity",
+    "DyTCConfig",
+    "DyTCScheduler",
+    "SpecEngine",
+    "PromptLookup",
+    "DraftTree",
+]

@@ -1,0 +1,40 @@
+"""Online acceptance-rate estimation (Eq. 4).
+
+EMA over a local history window of *first-token* acceptance outcomes:
+  a_new = lambda * a_prev + (1 - lambda) * mean(last H outcomes)
+
+Estimates for inactive configurations are preserved (Appendix D); cold-start
+uses heuristic priors based on DSIA aggressiveness.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Dict, Optional
+
+
+class AcceptanceTracker:
+    def __init__(self, lam: float = 0.7, window: int = 20, prior: float = 0.5):
+        self.lam = lam
+        self.window = window
+        self.prior = prior
+        self._alpha: Dict[str, float] = {}
+        self._hist: Dict[str, Deque[float]] = {}
+
+    def set_prior(self, config: str, alpha0: float) -> None:
+        self._alpha.setdefault(config, float(alpha0))
+
+    def observe(self, config: str, first_token_accepted: bool) -> None:
+        h = self._hist.setdefault(config, deque(maxlen=self.window))
+        h.append(1.0 if first_token_accepted else 0.0)
+        recent = sum(h) / len(h)
+        prev = self._alpha.get(config, self.prior)
+        self._alpha[config] = self.lam * prev + (1.0 - self.lam) * recent
+
+    def alpha(self, config: str) -> float:
+        return self._alpha.get(config, self.prior)
+
+    def counts(self, config: str) -> int:
+        return len(self._hist.get(config, ()))
+
+    def snapshot(self) -> Dict[str, float]:
+        return dict(self._alpha)

@@ -1,0 +1,259 @@
+"""CAS-Spec inference engine: DSIA draft execution + tree verification.
+
+Execution modes for layer-gated drafts:
+  - "slice": materialize a reduced-depth param pytree per draft config
+    (fewer FLOPs — the honest speed of a layer-sparse draft; requires a
+    homogeneous layer stack).
+  - "mask": one shared executable, gates passed as a traced vector (zero
+    recompiles; the TPU serve_step lowers this form).
+
+Cache discipline: drafts are STAGE-ONLY (never committed); only the full
+target model's verification staged KV/states are committed, so the cache is
+always exact — the losslessness invariant (see models.model docstring).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.acceptance import AcceptanceTracker
+from repro.core.dsia import DraftSpec
+from repro.core.latency import CostTracker
+from repro.core.pld import PromptLookup
+from repro.core.tree import DraftTree, bucket_for
+from repro.core import verify as verify_lib
+from repro.models import model as M
+
+import dataclasses
+
+
+def fake_quant_int8(params: dict) -> dict:
+    """Per-output-channel symmetric int8 weight fake-quantization (QSpec sim)."""
+
+    def q(w):
+        if not isinstance(w, jax.Array) or w.dtype not in (jnp.float32, jnp.bfloat16):
+            return w
+        if w.ndim < 2:
+            return w
+        w32 = w.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(w32), axis=tuple(range(w.ndim - 1)), keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        return (jnp.round(w32 / scale).clip(-127, 127) * scale).astype(w.dtype)
+
+    return jax.tree.map(q, params)
+
+
+class SpecEngine:
+    """Single-sequence (B=1) speculative engine; the batched path lives in
+    repro.serving.server."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        max_len: int = 2048,
+        draft_exec: str = "auto",          # auto | slice | mask
+        greedy: bool = True,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.greedy = greedy
+        segs = M.layout(cfg)
+        homogeneous = len(segs) == 1 and len(segs[0].unit) == 1
+        if draft_exec == "auto":
+            draft_exec = "slice" if homogeneous else "mask"
+        if draft_exec == "slice" and not homogeneous:
+            raise ValueError("slice exec requires a homogeneous layer stack")
+        self.draft_exec = draft_exec
+        self.pld = PromptLookup()
+        self.acceptance = AcceptanceTracker()
+        self.costs = CostTracker()
+
+        self._variants: Dict[str, Tuple[ModelConfig, dict, Optional[np.ndarray]]] = {
+            "full": (cfg, params, None)
+        }
+        self._spec_by_name: Dict[str, DraftSpec] = {}
+        self._decode_fns: Dict[Tuple[str, int], Callable] = {}
+        self._commit_fns: Dict[int, Callable] = {}
+        self._prefill_fn = jax.jit(
+            functools.partial(M.prefill, cfg), static_argnames=()
+        )
+        # runtime state
+        self.cache: Optional[dict] = None
+        self.tokens: List[int] = []
+        self.pending: Optional[int] = None
+        self.stats = {"target_calls": 0, "draft_calls": 0, "rounds": 0,
+                      "accepted_tokens": 0, "draft_time": 0.0, "verify_time": 0.0,
+                      "modeled_draft_cost": 0.0}
+
+    # ------------------------------------------------------------- variants
+    def register_draft(self, spec: DraftSpec) -> None:
+        if spec.kind == "retrieval" or spec.name in self._variants:
+            self.acceptance.set_prior(spec.name, spec.prior_alpha)
+            self.costs.set_prior(spec.name, spec.prior_c)
+            return
+        cfg, params = self.cfg, self.params
+        gates = spec.gates_array(self.cfg.num_layers)
+        if spec.quantize == "int8":
+            params = fake_quant_int8(params)
+        if self.draft_exec == "slice" and spec.gates is not None:
+            kept = np.flatnonzero(gates > 0)
+            cfg = dataclasses.replace(cfg, num_layers=len(kept))
+            seg = params["segments"][0]
+            params = dict(params)
+            params["segments"] = [jax.tree.map(lambda a: a[kept], seg)]
+            gates_arr = None
+        else:
+            gates_arr = gates
+        self._variants[spec.name] = (cfg, params, gates_arr)
+        self.acceptance.set_prior(spec.name, spec.prior_alpha)
+        self.costs.set_prior(spec.name, spec.prior_c)
+        self._spec_by_name[spec.name] = spec
+
+    def _slice_cache(self, variant: str) -> dict:
+        cfg_v, _, _ = self._variants[variant]
+        if variant == "full" or self.draft_exec != "slice" or cfg_v.num_layers == self.cfg.num_layers:
+            return self.cache
+        spec = self._spec_by_name[variant]
+        kept = np.flatnonzero(spec.gates_array(self.cfg.num_layers) > 0)
+        seg = self.cache["segments"][0]
+        return {
+            "pos": self.cache["pos"],
+            "segments": [jax.tree.map(lambda a: a[kept], seg)],
+        }
+
+    # --------------------------------------------------------------- jitting
+    def _decode_fn(self, variant: str, bucket: int) -> Callable:
+        key = (variant, bucket)
+        if key in self._decode_fns:
+            return self._decode_fns[key]
+        cfg_v, params_v, gates = self._variants[variant]
+        spec = getattr(self, "_spec_by_name", {}).get(variant)
+        override = None
+        if spec is not None and spec.attn_override is not None:
+            kind, window, sink = spec.attn_override
+            override = {"kind": kind, "window": window, "sink": sink}
+
+        @jax.jit
+        def fn(params, cache, tokens, tmask, qpos, gates_arr):
+            return M.decode_step(
+                cfg_v, params, cache, tokens,
+                gates=gates_arr, tree_mask=tmask, q_pos=qpos,
+                attn_override=override,
+            )
+
+        self._decode_fns[key] = (fn, params_v, gates)
+        return self._decode_fns[key]
+
+    def _commit_fn(self, bucket: int) -> Callable:
+        if bucket not in self._commit_fns:
+            self._commit_fns[bucket] = jax.jit(
+                functools.partial(M.commit_cache, self.cfg)
+            )
+        return self._commit_fns[bucket]
+
+    # ---------------------------------------------------------------- runtime
+    def start(self, prompt: np.ndarray) -> None:
+        prompt = np.asarray(prompt, np.int32)
+        self.cache = M.init_cache(self.cfg, 1, self.max_len, dtype=jnp.dtype(self.cfg.dtype))
+        t0 = time.perf_counter()
+        last, self.cache = jax.block_until_ready(
+            self._prefill_fn(self.params, {"tokens": jnp.asarray(prompt[None])}, self.cache)
+        )
+        self.costs.observe_target(time.perf_counter() - t0, tokens=max(len(prompt), 1))
+        self.tokens = list(map(int, prompt))
+        self.pending = int(np.argmax(np.asarray(last)[0]))
+
+    @property
+    def context(self) -> np.ndarray:
+        return np.asarray(self.tokens + [self.pending], np.int32)
+
+    def _run_nodes(
+        self,
+        variant: str,
+        tokens: np.ndarray,     # (n,)
+        rel_pos: np.ndarray,    # (n,)
+        mask: np.ndarray,       # (n, n)
+    ):
+        n = len(tokens)
+        T = bucket_for(n)
+        toks = np.zeros(T, np.int32)
+        toks[:n] = tokens
+        rel = np.zeros(T, np.int32)
+        rel[:n] = rel_pos
+        rel[n:] = (rel_pos.max() if n else 0) + 1 + np.arange(T - n)
+        m = np.eye(T, dtype=bool)
+        m[:n, :n] = mask
+        fn, params_v, gates = self._decode_fn(variant, T)
+        cache = self._slice_cache(variant)
+        qpos = jnp.asarray(self.cache["pos"] + jnp.asarray(rel))
+        logits, staged = fn(
+            params_v, cache, jnp.asarray(toks[None]), jnp.asarray(m), qpos,
+            None if gates is None else jnp.asarray(gates),
+        )
+        return logits, staged, T
+
+    # draft call: logits for a node set under a draft config (stage-only)
+    def draft_logits(self, spec_name: str, tokens, rel_pos, mask) -> np.ndarray:
+        t0 = time.perf_counter()
+        logits, _, _ = self._run_nodes(spec_name, tokens, rel_pos, mask)
+        logits = np.asarray(jax.block_until_ready(logits))[0]
+        dt = time.perf_counter() - t0
+        self.stats["draft_calls"] += 1
+        self.stats["draft_time"] += dt
+        # modeled TPU cost: one target-forward-equivalent x the DSIA cost
+        # coefficient per draft call (a KV-cached draft computes ~1 new
+        # token per call; chain recomputation is a CPU-engine artifact)
+        spec = self._spec_by_name.get(spec_name)
+        self.stats["modeled_draft_cost"] += spec.prior_c if spec else 0.5
+        self.costs.observe(spec_name, dt, tokens=len(tokens))
+        return logits[: len(tokens)]
+
+    # verification: full model over the tree, then commit the accepted path
+    def verify_and_commit(self, tree: DraftTree) -> List[int]:
+        tokens, rel, mask, real = tree.flatten()
+        n = len(tree)
+        t0 = time.perf_counter()
+        logits, staged, T = self._run_nodes("full", tokens[:n], rel[:n], mask[:n, :n])
+        logits = np.asarray(jax.block_until_ready(logits))[0]   # (T, V)
+        self.stats["verify_time"] += time.perf_counter() - t0
+        self.stats["target_calls"] += 1
+        self.costs.observe_target(time.perf_counter() - t0, tokens=1)
+        next_argmax = np.argmax(logits[:n], axis=-1)
+        path, bonus = verify_lib.greedy_accept_tree(tree, next_argmax)
+
+        # commit: accepted nodes' staged KV/states, in path order
+        T_pad = bucket_for(n)
+        path_idx = np.zeros(T_pad, np.int32)
+        path_idx[: len(path)] = path
+        commit = self._commit_fn(T_pad)
+        self.cache = commit(
+            self.cache, staged, jnp.asarray(path_idx), jnp.asarray(len(path), jnp.int32)
+        )
+        accepted = [tree.tokens[i] for i in path]
+        self.tokens.extend(accepted)
+        self.pending = int(bonus)
+        self.stats["rounds"] += 1
+        self.stats["accepted_tokens"] += len(accepted)
+        return accepted
+
+    # ------------------------------------------------------------ baselines
+    def ar_step(self) -> int:
+        """Plain autoregressive: verify a root-only tree (1 token/step)."""
+        tree = DraftTree(self.pending)
+        self.verify_and_commit(tree)
+        return self.tokens[-1]
+
+    def generate_ar(self, n_tokens: int) -> List[int]:
+        out = []
+        while len(out) < n_tokens:
+            self.ar_step()
+            out.append(self.tokens[-1])
+        return out[:n_tokens]

@@ -1,0 +1,94 @@
+"""Hardware-aware latency prediction (§4.2): Bayesian linear regression over
+roofline features.
+
+The paper fits BLR on GPU timings. Our TPU-target adaptation feeds the same
+regressor with *roofline terms derived from compiled HLO* (see
+repro.analysis.roofline): [1, flops/peak, bytes/hbm_bw, coll_bytes/ici_bw].
+On CPU (live benchmarks) the same class is updated online from measured
+wall-times, so `c_hat` adapts to the actual machine — exactly the paper's
+mechanism, different feature source.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+
+class BayesianLinearLatency:
+    """Gaussian BLR: posterior over w in t = w . phi(x) + noise."""
+
+    def __init__(self, dim: int = 4, prior_scale: float = 10.0, noise: float = 1e-3):
+        self.dim = dim
+        self.noise = noise
+        self.precision = np.eye(dim) / (prior_scale ** 2)
+        self.mean_times_prec = np.zeros(dim)
+
+    # ------------------------------------------------------------------ update
+    def observe(self, features: Sequence[float], latency: float) -> None:
+        x = np.asarray(features, dtype=np.float64)
+        self.precision += np.outer(x, x) / self.noise
+        self.mean_times_prec += x * latency / self.noise
+
+    @property
+    def weights(self) -> np.ndarray:
+        return np.linalg.solve(self.precision, self.mean_times_prec)
+
+    def predict(self, features: Sequence[float]) -> float:
+        x = np.asarray(features, dtype=np.float64)
+        return float(self.weights @ x)
+
+    def predict_with_var(self, features: Sequence[float]) -> tuple:
+        x = np.asarray(features, dtype=np.float64)
+        cov = np.linalg.inv(self.precision)
+        return float(self.weights @ x), float(x @ cov @ x + self.noise)
+
+
+def roofline_features(flops: float, bytes_hbm: float, coll_bytes: float) -> list:
+    """phi(x) = [1, compute-term, memory-term, collective-term] (seconds)."""
+    return [1.0, flops / PEAK_FLOPS, bytes_hbm / HBM_BW, coll_bytes / ICI_BW]
+
+
+def roofline_latency(flops: float, bytes_hbm: float, coll_bytes: float = 0.0) -> float:
+    """Max-of-terms roofline estimate (used as the BLR prior's anchor)."""
+    return max(flops / PEAK_FLOPS, bytes_hbm / HBM_BW, coll_bytes / ICI_BW)
+
+
+class CostTracker:
+    """Per-config cost coefficients c(M_t, M_d) with online refinement.
+
+    Keeps a BLR per config keyed by (tokens_processed,) plus an EMA of the
+    measured per-call latency; `c_hat(config)` returns the latency ratio to
+    the target model's single-step latency.
+    """
+
+    def __init__(self, ema: float = 0.8):
+        self.ema = ema
+        self._lat: dict = {}
+        self._target_lat: Optional[float] = None
+
+    def observe(self, config: str, seconds: float, tokens: int = 1) -> None:
+        per_tok = seconds / max(tokens, 1)
+        prev = self._lat.get(config)
+        self._lat[config] = per_tok if prev is None else self.ema * prev + (1 - self.ema) * per_tok
+
+    def observe_target(self, seconds: float, tokens: int = 1) -> None:
+        per_tok = seconds / max(tokens, 1)
+        prev = self._target_lat
+        self._target_lat = per_tok if prev is None else self.ema * prev + (1 - self.ema) * per_tok
+
+    def set_prior(self, config: str, c: float) -> None:
+        self._lat.setdefault(config, c)  # stored as ratio until target known
+
+    def c_hat(self, config: str, default: float = 0.5) -> float:
+        lat = self._lat.get(config)
+        if lat is None:
+            return default
+        if self._target_lat is None or self._target_lat <= 0:
+            return lat if lat < 10 else default   # prior stored as ratio
+        return min(lat / self._target_lat, 10.0)

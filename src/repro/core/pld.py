@@ -1,0 +1,59 @@
+"""Prompt Lookup Decoding (PLD) — the bottom draft model M_dn.
+
+Retrieval-based n-gram drafting [Saxena 2023]: find the longest suffix of the
+current context that re-occurs earlier in the context and propose the tokens
+that followed it. Negligible cost (c ~ 0.01), host-side numpy.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+class PromptLookup:
+    def __init__(self, max_ngram: int = 4, min_ngram: int = 1, max_draft: int = 10):
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+        self.max_draft = max_draft
+
+    def propose(self, context: np.ndarray, k: Optional[int] = None) -> np.ndarray:
+        """Return up to ``k`` draft tokens (possibly empty).
+
+        Also returns a confidence proxy: longer n-gram matches rank higher
+        (used by DyTC for token-level branch scoring of non-neural drafts).
+        """
+        tokens, _ = self.propose_with_confidence(context, k)
+        return tokens
+
+    def propose_with_confidence(
+        self, context: np.ndarray, k: Optional[int] = None
+    ) -> Tuple[np.ndarray, float]:
+        k = k or self.max_draft
+        ctx = np.asarray(context).ravel()
+        n = len(ctx)
+        empty = np.zeros((0,), dtype=ctx.dtype)
+        if n < self.min_ngram + 1:
+            return empty, 0.0
+        for ng in range(min(self.max_ngram, n - 1), self.min_ngram - 1, -1):
+            suffix = ctx[n - ng :]
+            # all windows of length ng ending strictly before the suffix
+            limit = n - ng
+            if limit <= 0:
+                continue
+            windows = np.lib.stride_tricks.sliding_window_view(ctx[: n - 1], ng)
+            hits = np.flatnonzero((windows == suffix).all(axis=1))
+            hits = hits[hits + ng < n]          # must have a continuation
+            hits = hits[hits + ng <= n - 1]
+            # prefer the most recent occurrence (better locality)
+            for start in hits[::-1]:
+                cont_start = start + ng
+                cont_end = min(cont_start + k, n - ng)  # avoid trivially matching the suffix itself
+                cont_end = min(cont_start + k, n)
+                cont = ctx[cont_start : cont_end]
+                # never propose past the suffix start (that's the suffix itself)
+                cont = cont[: max(0, (n - ng) - cont_start)]
+                if len(cont):
+                    conf = ng / self.max_ngram
+                    return cont[:k].copy(), conf
+        return empty, 0.0

@@ -1,0 +1,121 @@
+"""Draft token tree for DyTC (host-side structure + device mask export).
+
+Node 0 is the root: the *pending bonus token* from the previous verification
+(Alg. 1 line 1 — "N_root representing the last bonus token x_0"). Its KV is
+not yet committed; every verification pass therefore processes the full tree
+including the root, and the root is accepted unconditionally (it is the
+target model's own token).
+
+TPU adaptation: trees are padded to fixed bucket sizes before lowering, and
+the visibility mask is a dense (T, T) ancestor-closure matrix — MXU-friendly
+(see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+TREE_BUCKETS = (8, 16, 32, 64, 128)
+
+
+def bucket_for(n: int) -> int:
+    for b in TREE_BUCKETS:
+        if n <= b:
+            return b
+    raise ValueError(f"tree too large: {n} > {TREE_BUCKETS[-1]}")
+
+
+class DraftTree:
+    def __init__(self, root_token: int):
+        self.tokens: List[int] = [int(root_token)]
+        self.parents: List[int] = [-1]
+        self.depth: List[int] = [0]
+        self.config: List[str] = ["root"]
+        self.p_acc: List[float] = [1.0]
+        self.active: List[bool] = [True]
+        self.children: Dict[int, List[int]] = {0: []}
+
+    # ------------------------------------------------------------- structure
+    def __len__(self) -> int:
+        return len(self.tokens)
+
+    def add_child(
+        self, parent: int, token: int, config: str, alpha: float
+    ) -> int:
+        idx = len(self.tokens)
+        self.tokens.append(int(token))
+        self.parents.append(parent)
+        self.depth.append(self.depth[parent] + 1)
+        self.config.append(config)
+        self.p_acc.append(self.p_acc[parent] * float(alpha))
+        self.active.append(True)
+        self.children[idx] = []
+        self.children[parent].append(idx)
+        return idx
+
+    def deactivate(self, node: int) -> None:
+        self.active[node] = False
+
+    def best_active_leaf(self) -> Optional[int]:
+        """argmax P_acc over active nodes (Alg. 1 line 5)."""
+        best, best_p = None, -1.0
+        for i in range(len(self.tokens)):
+            if self.active[i] and self.p_acc[i] > best_p:
+                best, best_p = i, self.p_acc[i]
+        return best
+
+    def path_to(self, node: int) -> List[int]:
+        path = []
+        while node != -1:
+            path.append(node)
+            node = self.parents[node]
+        return path[::-1]
+
+    def path_tokens(self, node: int) -> List[int]:
+        return [self.tokens[i] for i in self.path_to(node)]
+
+    def siblings(self, node: int) -> List[int]:
+        p = self.parents[node]
+        if p == -1:
+            return []
+        return [c for c in self.children[p] if c != node]
+
+    # -------------------------------------------------------------- flatten
+    def flatten(
+        self, bucket: Optional[int] = None
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (tokens (T,), rel_pos (T,), mask (T,T), real (T,)).
+
+        rel_pos[i] = depth[i] (absolute position = cache_pos + depth).
+        mask[i, j] = True iff j is an ancestor-or-self of i.
+        Padded nodes have real=False, self-only visibility, rel_pos = depth 0.
+        """
+        n = len(self.tokens)
+        T = bucket or bucket_for(n)
+        tokens = np.zeros(T, np.int32)
+        rel = np.zeros(T, np.int32)
+        mask = np.eye(T, dtype=bool)
+        real = np.zeros(T, bool)
+        tokens[:n] = self.tokens
+        rel[:n] = self.depth
+        real[:n] = True
+        for i in range(n):
+            j = i
+            while j != -1:
+                mask[i, j] = True
+                j = self.parents[j]
+        # padded slots: positions far away so they never interfere via rope;
+        # they only see themselves and nothing attends to them.
+        rel[n:] = np.arange(T - n) + max(self.depth) + 1 if n else 0
+        return tokens, rel, mask, real
+
+
+def chain_tree(root_token: int, chain: Sequence[int], config: str, alpha: float) -> DraftTree:
+    """Convenience: a pure-chain tree (vanilla SD / cascades)."""
+    t = DraftTree(root_token)
+    node = 0
+    for tok in chain:
+        node = t.add_child(node, tok, config, alpha)
+    return t

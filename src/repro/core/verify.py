@@ -1,0 +1,77 @@
+"""Lossless verification.
+
+Greedy mode: the accepted path is exactly the target model's own greedy
+continuation — spec-decoded output is token-identical to AR decoding.
+
+Sampling mode: chain speculative sampling [Leviathan et al. 2023] — accept
+draft token with prob min(1, p_t/p_d), else resample from the residual
+distribution; distribution-preserving (lossless in law).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.tree import DraftTree
+
+
+def greedy_accept_tree(
+    tree: DraftTree, next_argmax: np.ndarray
+) -> Tuple[List[int], int]:
+    """Walk the tree following the target's argmax at every node.
+
+    ``next_argmax[i]`` = target's argmax next-token after node i (from the
+    verify forward). Returns (accepted node path incl. root, bonus token).
+    """
+    path = [0]
+    node = 0
+    while True:
+        want = int(next_argmax[node])
+        nxt = None
+        for c in tree.children.get(node, ()):
+            if tree.tokens[c] == want:
+                nxt = c
+                break
+        if nxt is None:
+            return path, want
+        path.append(nxt)
+        node = nxt
+
+
+def spec_sample_chain(
+    draft_tokens: np.ndarray,       # (k,)
+    draft_probs: np.ndarray,        # (k, V) draft distribution per position
+    target_probs: np.ndarray,       # (k+1, V) target distribution (incl. bonus)
+    rng: np.random.Generator,
+) -> Tuple[int, int]:
+    """Returns (n_accepted, next_token). next_token is the residual-resampled
+    token at the rejection point, or a fresh sample from the bonus position
+    when everything is accepted."""
+    k = len(draft_tokens)
+    for i in range(k):
+        tok = int(draft_tokens[i])
+        p_t = float(target_probs[i, tok])
+        p_d = float(draft_probs[i, tok])
+        if p_d <= 0.0 or rng.random() < min(1.0, p_t / max(p_d, 1e-30)):
+            if p_d <= 0.0 and p_t <= 0.0:
+                pass  # fall through to rejection
+            else:
+                continue
+        residual = np.clip(target_probs[i] - draft_probs[i], 0.0, None)
+        z = residual.sum()
+        if z <= 0:
+            residual = target_probs[i]
+            z = residual.sum()
+        nxt = int(rng.choice(len(residual), p=residual / z))
+        return i, nxt
+    p = target_probs[k]
+    nxt = int(rng.choice(len(p), p=p / p.sum()))
+    return k, nxt
+
+
+def softmax(x: np.ndarray, temperature: float = 1.0, axis: int = -1) -> np.ndarray:
+    x = np.asarray(x, np.float64) / max(temperature, 1e-6)
+    x = x - x.max(axis=axis, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=axis, keepdims=True)

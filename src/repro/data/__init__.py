@@ -1,0 +1,18 @@
+"""Data substrate: byte tokenizer + synthetic Spec-Bench-style task suite."""
+from repro.data.tokenizer import ByteTokenizer
+from repro.data.pipeline import (
+    SPEC_TASKS,
+    TaskSpec,
+    lm_batches,
+    make_task_prompts,
+    synthetic_corpus,
+)
+
+__all__ = [
+    "ByteTokenizer",
+    "SPEC_TASKS",
+    "TaskSpec",
+    "lm_batches",
+    "make_task_prompts",
+    "synthetic_corpus",
+]

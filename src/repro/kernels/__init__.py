@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical layers of CAS-Spec.
+
+  flash_decode   — chunked KV-cache attention partials (verify / AR decode)
+  tree_attention — dense tree-masked staged-token attention partials
+  int8_matmul    — W8A8 quantized matmul (ActivationQuant DSIA)
+  ops            — jit wrappers + flash-decoding combine
+  ref            — pure-jnp oracles
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True against ref.py.
+"""
+from repro.kernels.ops import quantized_matmul, verify_attention
+
+__all__ = ["quantized_matmul", "verify_attention"]

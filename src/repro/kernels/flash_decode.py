@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: flash-decode attention over a committed KV cache.
+
+The memory-bound hot loop of speculative *verification*: T staged query rows
+(tree bucket, or T=1 for plain AR decode) attend over an S-long KV cache.
+KV is streamed HBM->VMEM in ``block_s`` chunks along the innermost grid dim
+with online-softmax scratch carried in VMEM across chunks; the (small) query
+block stays resident in VMEM. Returns un-normalized partials (acc, m, l) so
+the caller can merge with the staged-token tree attention (see ops.py) —
+exactly the flash-decoding split-KV combine, adapted to the verify step.
+
+Layouts (per kv-head group g, GQA rep = H // KV):
+  q:      (B, KV, R, hd)   R = rep * T query rows, hd padded to 128
+  k/v:    (B, KV, S, hd)   S padded to block_s
+  kv_pos: (B, S) int32     slot position, -1 = invalid (ring/empty)
+  q_pos:  (B, R) int32     absolute position per query row
+Outputs: acc (B, KV, R, hd) f32, m/l (B, KV, R) f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, kvpos_ref, qpos_ref,          # inputs
+    acc_ref, m_ref, l_ref,                             # outputs
+    m_scr, l_scr, o_scr,                               # VMEM scratch
+    *, kind: str, window: int, sink: int, scale: float, nk: int,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        o_scr[...] = jnp.zeros_like(o_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (R, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                # (blk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    kvp = kvpos_ref[0]                                 # (blk,)
+    qp = qpos_ref[0]                                   # (R,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # (R, blk)
+    qpc = qp[:, None]
+    kpc = kvp[None, :]
+    valid = (kpc >= 0) & (kpc <= qpc)
+    if kind == "window":
+        valid &= kpc > qpc - window
+    elif kind == "streaming":
+        valid &= (kpc < sink) | (kpc > qpc - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]                                # (R, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))[:, None]
+    p = jnp.exp(s - m_new)                             # (R, blk)
+    corr = jnp.exp(m_prev - m_new)                     # (R, 1)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)[:, None]
+    o_scr[...] = o_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _fini():
+        acc_ref[0, 0] = o_scr[...]
+        m_ref[0, 0] = m_scr[...][:, 0]
+        l_ref[0, 0] = l_scr[...][:, 0]
+
+
+def flash_decode_partial(
+    q: jax.Array,        # (B, KV, R, hd)
+    k: jax.Array,        # (B, KV, S, hd)
+    v: jax.Array,
+    kv_pos: jax.Array,   # (B, S) int32
+    q_pos: jax.Array,    # (B, R) int32
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    sink: int = 0,
+    block_s: int = 512,
+    interpret: bool = True,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, KV, R, hd = q.shape
+    S = k.shape[2]
+    blk = min(block_s, S)
+    assert S % blk == 0, f"S={S} must be a multiple of block_s={blk} (pad in ops)"
+    nk = S // blk
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _kernel, kind=kind, window=window, sink=sink, scale=scale, nk=nk
+    )
+    grid = (B, KV, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g, j: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, 1, blk, hd), lambda b, g, j: (b, g, j, 0)),
+            pl.BlockSpec((1, blk), lambda b, g, j: (b, j)),
+            pl.BlockSpec((1, R), lambda b, g, j: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g, j: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g, j: (b, g, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g, j: (b, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, R, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_pos, q_pos)

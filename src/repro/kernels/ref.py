@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_verify_attention(
+    q: jax.Array,        # (B, KV, R, hd)  R = rep * T
+    k_cache: jax.Array,  # (B, KV, S, hd)
+    v_cache: jax.Array,
+    kv_pos: jax.Array,   # (B, S)
+    q_pos: jax.Array,    # (B, R)
+    k_new: jax.Array,    # (B, KV, T, hd)
+    v_new: jax.Array,
+    tree_mask: jax.Array,    # (B, T, T)
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    sink: int = 0,
+) -> jax.Array:
+    """Full softmax over [cache ++ staged]; returns (B, KV, R, hd) f32."""
+    B, KV, R, hd = q.shape
+    T = k_new.shape[2]
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+
+    s_c = jnp.einsum("bgrh,bgsh->bgrs", qf, k_cache.astype(jnp.float32))
+    qp = q_pos[:, None, :, None]
+    kp = kv_pos[:, None, None, :]
+    valid = (kp >= 0) & (kp <= qp)
+    if kind == "window":
+        valid &= kp > qp - window
+    elif kind == "streaming":
+        valid &= (kp < sink) | (kp > qp - window)
+    s_c = jnp.where(valid, s_c, NEG_INF)
+
+    s_d = jnp.einsum("bgrh,bgth->bgrt", qf, k_new.astype(jnp.float32))
+    row_node = jnp.arange(R) % T
+    vis = tree_mask[:, row_node, :]                   # (B, R, T)
+    s_d = jnp.where(vis[:, None], s_d, NEG_INF)
+
+    s = jnp.concatenate([s_c, s_d], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    vcat = jnp.concatenate([v_cache, v_new], axis=2).astype(jnp.float32)
+    return jnp.einsum("bgrs,bgsh->bgrh", p, vcat)
+
+
+def ref_int8_matmul(
+    x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array, w_scale: jax.Array
+) -> jax.Array:
+    acc = jnp.einsum(
+        "mk,kn->mn",
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+    ).astype(jnp.float32)
+    return acc * x_scale * w_scale

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: dense tree-masked attention over staged draft tokens.
+
+The intra-tree half of verification attention: T staged tokens attend over
+each other under the ancestor-closure mask (dense (T, T) — MXU-friendly; see
+DESIGN.md §3). The whole padded tree bucket lives in VMEM; one grid step per
+(batch, kv-head). Returns partials (acc, m, l) merged with the flash-decode
+cache partials in ops.py.
+
+Layouts (rep = H // KV, R = rep * T rows, row = r * T + t):
+  q:     (B, KV, R, hd)
+  k/v:   (B, KV, T, hd)      staged draft keys/values
+  mask:  (B, T, T) bool      ancestor-or-self & positional validity
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, acc_ref, m_ref, l_ref, *, scale, rep):
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (R, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (T, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    mask = mask_ref[0]                                # (T, T)
+    R = q.shape[0]
+    T = k.shape[0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                 # (R, T)
+    # row r*T + t corresponds to tree node t — tile the mask over rep
+    row_node = jax.lax.broadcasted_iota(jnp.int32, (R, T), 0) % T
+    col_node = jax.lax.broadcasted_iota(jnp.int32, (R, T), 1)
+    vis = mask[row_node, col_node]
+    s = jnp.where(vis, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)                           # (R,)
+    p = jnp.exp(s - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    o = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_ref[0, 0] = o
+    m_ref[0, 0] = m
+    l_ref[0, 0] = l
+
+
+def tree_attention_partial(
+    q: jax.Array,        # (B, KV, R, hd)
+    k_new: jax.Array,    # (B, KV, T, hd)
+    v_new: jax.Array,
+    mask: jax.Array,     # (B, T, T) bool
+    *,
+    interpret: bool = True,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    B, KV, R, hd = q.shape
+    T = k_new.shape[2]
+    rep = R // T
+    kernel = functools.partial(
+        _kernel, scale=hd ** -0.5 if scale is None else scale, rep=rep
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, T, hd), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, T, hd), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, T, T), lambda b, g: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g: (b, g, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g: (b, g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, R, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_new, v_new, mask)

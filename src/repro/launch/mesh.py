@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS host-device-count=512 BEFORE
+any jax import; tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def data_axes(mesh) -> tuple:
+    """The (possibly compound) batch-parallel axes of a mesh."""
+    names = mesh.axis_names
+    return ("pod", "data") if "pod" in names else ("data",)
+
+
+def make_host_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over real local devices (CPU tests)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,68 @@
+"""Serving driver: CAS-Spec engine (single stream) or batched server.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --reduced \
+      --scheduler dytc --tokens 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.config import get_config
+from repro.core.cascade import (
+    ARScheduler, HCScheduler, PLDScheduler, SDScheduler, TreeScheduler,
+    TreeVCScheduler, VCHCScheduler, VCScheduler,
+)
+from repro.core.dsia import build_hierarchy, layer_sparsity
+from repro.core.dytc import DyTCScheduler
+from repro.core.engine import SpecEngine
+from repro.data import SPEC_TASKS, make_task_prompts
+from repro.models import model as M
+
+SCHEDULERS = {
+    "ar": lambda e, cfg: ARScheduler(e),
+    "pld": lambda e, cfg: PLDScheduler(e, k=8),
+    "swift": lambda e, cfg: SDScheduler(e, layer_sparsity(cfg, 0.4), k=4),
+    "vc": lambda e, cfg: VCScheduler(e, layer_sparsity(cfg, 0.4)),
+    "hc": lambda e, cfg: HCScheduler(e, layer_sparsity(cfg, 0.4)),
+    "vchc": lambda e, cfg: VCHCScheduler(e, layer_sparsity(cfg, 0.4)),
+    "tree": lambda e, cfg: TreeScheduler(e, layer_sparsity(cfg, 0.4)),
+    "dytc": lambda e, cfg: DyTCScheduler(e, build_hierarchy(cfg)),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vicuna-7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--scheduler", default="dytc", choices=sorted(SCHEDULERS))
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--task", default="summarization")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = dataclasses.replace(cfg.reduced(), num_layers=8)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = make_task_prompts(SPEC_TASKS[args.task], 1, cfg.vocab_size)[0]
+
+    eng = SpecEngine(cfg, params, max_len=1024)
+    eng.start(prompt)
+    sched = SCHEDULERS[args.scheduler](eng, cfg)
+    t0 = time.perf_counter()
+    out = sched.generate(args.tokens)
+    dt = time.perf_counter() - t0
+    s = eng.stats
+    print(f"scheduler={args.scheduler} tokens={len(out)} time={dt:.2f}s "
+          f"({dt/len(out)*1e3:.1f} ms/tok)")
+    print(f"rounds={s['rounds']} target_calls={s['target_calls']} "
+          f"mean_accepted={s['accepted_tokens']/max(s['rounds'],1):.2f}")
+    print("output:", out[:32], "..." if len(out) > 32 else "")
+
+
+if __name__ == "__main__":
+    main()

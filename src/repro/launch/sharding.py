@@ -1,0 +1,291 @@
+"""Sharding rules: PartitionSpec trees for params / optimizer / cache / batch.
+
+MaxText-style logical rules, resolved per architecture:
+  - embeddings / lm_head:   vocab -> model
+  - attention q/k/v/o:      heads -> model when divisible, else head_dim,
+                            else replicated (tiny-head archs like gemma3 MQA)
+  - dense MLP:              d_ff -> model
+  - MoE experts:            expert d_ff -> model (expert count 8/60/16 is not
+                            always divisible by 16; d_ff always is)
+  - Mamba:                  in_proj d (contraction) -> model (psum once),
+                            out_proj d_model (output) -> model
+  - activations:            batch -> (pod, data); long-context batch=1 decode
+                            shards the KV-cache/scan sequence dim -> data
+                            (context parallelism)
+  - optimizer moments:      same spec as the param (ZeRO-style along model)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import BlockKind, ModelConfig
+from repro.models import model as M
+
+
+def _axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def attention_policy(cfg: ModelConfig, model_size: int) -> str:
+    """Head-sharding policy ladder (see models.attention sharding note):
+
+      kv   — KV heads divide the model axis: shard K/V/cache + Q on heads
+      q    — only Q heads divide: shard Q heads, REPLICATE K/V over model
+             (GQA K/V weights and cache are small; scores expand to H)
+      none — neither divides (tiny-head archs: gemma3 H=4, musicgen H=24,
+             starcoder2 H=24): attention replicated over model, the model
+             axis works only in the MLP. NEVER shard head_dim — it is the
+             score contraction and costs an all-reduce per KV chunk.
+    """
+    if cfg.num_kv_heads and cfg.num_kv_heads % model_size == 0:
+        return "kv"
+    if cfg.num_heads and cfg.num_heads % model_size == 0:
+        return "q"
+    return "none"
+
+
+def attn_param_specs(cfg: ModelConfig, mesh) -> dict:
+    n = _axis_size(mesh, "model")
+    pol = attention_policy(cfg, n)
+    qh = "model" if pol in ("kv", "q") else None
+    kh = "model" if pol == "kv" else None
+    return {
+        "wq": P(None, qh, None),
+        "wk": P(None, kh, None),
+        "wv": P(None, kh, None),
+        "wo": P(qh, None, None),
+    }
+
+
+def mamba_policy(cfg: ModelConfig, model_size: int) -> bool:
+    """Shard d_inner (z/x/conv/heads) iff nh divides the model axis."""
+    s = cfg.ssm
+    return s is not None and s.num_heads(cfg.d_model) % model_size == 0
+
+
+def mamba_param_specs(cfg: ModelConfig, mesh) -> dict:
+    n = _axis_size(mesh, "model")
+    din_ax = "model" if mamba_policy(cfg, n) else None
+    return {
+        "w_z": P(None, din_ax),
+        "w_x": P(None, din_ax),
+        "w_B": P(),
+        "w_C": P(),
+        "w_dt": P(),
+        "conv_x": P(None, din_ax),
+        "conv_B": P(),
+        "conv_C": P(),
+        "A_log": P(),
+        "D": P(),
+        "dt_bias": P(),
+        "norm_w": P(din_ax),
+        "out_proj": P(din_ax, None),     # contract sharded d_inner: one psum
+    }
+
+
+def layer_param_specs(cfg: ModelConfig, spec: M.LayerSpec, mesh) -> dict:
+    out: dict = {"norm1": P()}
+    if spec.block is BlockKind.ATTENTION:
+        out["attn"] = attn_param_specs(cfg, mesh)
+    else:
+        out["mamba"] = mamba_param_specs(cfg, mesh)
+    if spec.has_mlp:
+        out["norm2"] = P()
+        if spec.is_moe:
+            moe = {
+                "w_router": P(),
+                "w_up": P(None, None, "model"),
+                "w_down": P(None, "model", None),
+            }
+            if cfg.mlp_gated:
+                moe["w_gate"] = P(None, None, "model")
+            if cfg.moe.num_shared_experts:
+                sh = {"w_up": P(None, "model"), "w_down": P("model", None)}
+                if cfg.mlp_gated:
+                    sh["w_gate"] = P(None, "model")
+                moe["shared"] = sh
+                moe["w_shared_gate"] = P()
+            out["moe"] = moe
+        else:
+            mlp = {"w_up": P(None, "model"), "w_down": P("model", None)}
+            if cfg.mlp_gated:
+                mlp["w_gate"] = P(None, "model")
+            out["mlp"] = mlp
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh) -> dict:
+    """PartitionSpec pytree congruent with models.init_params(cfg)."""
+    # stacked segment leaves carry a leading repeats dim -> prepend None
+    def stack(spec_tree):
+        return jax.tree.map(
+            lambda p: P(*((None,) + tuple(p))), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    segs = []
+    for seg in M.layout(cfg):
+        segs.append(stack([layer_param_specs(cfg, s, mesh) for s in seg.unit]))
+    out = {
+        "embed": P(None, "model", None) if cfg.num_codebooks else P("model", None),
+        "final_norm": P(),
+        "segments": segs,
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P(None, None, "model") if cfg.num_codebooks else P(None, "model")
+    return out
+
+
+def cache_seq_axes(cfg: ModelConfig, mesh, *, shard_seq: bool = False):
+    """Mesh axes carrying the cache sequence dim (context parallelism).
+
+    Policy kv keeps seq local (KV heads carry 'model'); policies q/none put
+    'model' on seq — the flash-decoding split-KV partials in
+    attention.decode_attention make the combine the only communication.
+    Long-context batch=1 (shard_seq) adds the data axes.
+    """
+    n = _axis_size(mesh, "model")
+    pol = attention_policy(cfg, n)
+    axes = ()
+    if shard_seq:
+        axes += _dp(mesh) if isinstance(_dp(mesh), tuple) else (_dp(mesh),)
+    if pol != "kv":
+        axes += ("model",)
+    return axes or None
+
+
+def seq_shard_count(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> int:
+    axes = cache_seq_axes(cfg, mesh, shard_seq=shard_seq)
+    if not axes:
+        return 0
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return total
+
+
+def cache_specs(
+    cfg: ModelConfig, mesh, *, shard_seq: bool = False, ring_window: bool = False
+) -> dict:
+    """Cache pytree specs. shard_seq=True -> context parallelism for batch=1
+    long-context decode."""
+    n = _axis_size(mesh, "model")
+    pol = attention_policy(cfg, n)
+    kh = "model" if pol == "kv" else None
+    batch_ax = None if shard_seq else _dp(mesh)
+    seq_ax = cache_seq_axes(cfg, mesh, shard_seq=shard_seq)
+    segs = []
+    from repro.config.base import AttentionKind
+
+    for seg in M.layout(cfg):
+        unit = []
+        for spec in seg.unit:
+            if spec.block is BlockKind.ATTENTION:
+                ring = ring_window and spec.attn is AttentionKind.SLIDING
+                unit.append(
+                    {
+                        "k": P(None, batch_ax, None if ring else seq_ax, kh, None),
+                        "v": P(None, batch_ax, None if ring else seq_ax, kh, None),
+                    }
+                )
+            else:
+                din_ax = "model" if mamba_policy(cfg, n) else None
+                unit.append(
+                    {
+                        "ssm": P(None, batch_ax, din_ax, None, None),
+                        "conv_x": P(None, batch_ax, None, din_ax),
+                        "conv_B": P(None, batch_ax, None, None),
+                        "conv_C": P(None, batch_ax, None, None),
+                    }
+                )
+        segs.append(unit)
+    return {"pos": P(batch_ax), "segments": segs}
+
+
+def _dp(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_specs(cfg: ModelConfig, mesh, *, global_batch: int) -> dict:
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
+    bax = dp if global_batch % dp_size == 0 and global_batch >= dp_size else None
+    out = {"tokens": P(bax, None, None) if cfg.num_codebooks else P(bax, None)}
+    if cfg.num_image_tokens:
+        out["image_embeds"] = P(bax, None, None)
+        out["image_mask"] = P(bax, None)
+    return out
+
+
+def staged_specs(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> list:
+    """Specs for decode_step staged outputs (same layout as cache but with
+    the T dim unsharded; mamba staged states carry an extra per-step dim)."""
+    n = _axis_size(mesh, "model")
+    pol = attention_policy(cfg, n)
+    kh = "model" if pol == "kv" else None
+    batch_ax = None if shard_seq else _dp(mesh)
+    segs = []
+    for seg in M.layout(cfg):
+        unit = []
+        for spec in seg.unit:
+            if spec.block is BlockKind.ATTENTION:
+                unit.append(
+                    {
+                        "k": P(None, batch_ax, None, kh, None),
+                        "v": P(None, batch_ax, None, kh, None),
+                    }
+                )
+            else:
+                din_ax = "model" if mamba_policy(cfg, n) else None
+                unit.append(
+                    {
+                        "ssm": P(None, batch_ax, None, din_ax, None, None),
+                        "conv_x": P(None, batch_ax, None, None, din_ax),
+                        "conv_B": P(None, batch_ax, None, None, None),
+                        "conv_C": P(None, batch_ax, None, None, None),
+                    }
+                )
+        segs.append(unit)
+    return segs
+
+
+def opt_specs(pspecs: Any) -> Any:
+    """AdamW moments shard like their params."""
+    from repro.training.optimizer import AdamWState
+
+    return AdamWState(step=P(), mu=pspecs, nu=pspecs)
+
+
+def fsdp_upgrade(pspecs: Any, pshapes: Any, mesh, *, min_dim: int = 512) -> Any:
+    """Additionally shard layer-stack weights over 'data' on their first
+    free dim.
+
+    FSDP-style 2D weight sharding: required for training (4x f32 moments)
+    and for inference of models whose TP-only shard exceeds HBM (mixtral).
+    Only ``segments`` weights are upgraded: embed/lm_head stay vocab-sharded
+    — 2D-sharding them puts 'data' on the unembed contraction dim, which
+    makes GSPMD all-gather the (batch-sharded) activations instead of the
+    small weight shard (measured: +45 GiB/device temp on stablelm train).
+    The repeats dim of stacked segments is never sharded (it is scanned);
+    dims smaller than ``min_dim`` are skipped, which excludes it naturally.
+    """
+    data = _axis_size(mesh, "data")
+
+    def upgrade(spec: P, shape) -> P:
+        dims = list(spec) + [None] * (len(shape.shape) - len(spec))
+        for i, (ax, n) in enumerate(zip(dims, shape.shape)):
+            if ax is None and n >= min_dim and n % data == 0:
+                dims[i] = "data"
+                break
+        return P(*dims)
+
+    out = dict(pspecs)
+    out["segments"] = jax.tree.map(
+        upgrade, pspecs["segments"], pshapes["segments"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return out

@@ -1,0 +1,56 @@
+"""Distributed training driver (CPU-runnable at reduced scale; the
+production mesh path is exercised by the dry-run).
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --steps 20 \
+      --reduced --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.data import lm_batches, synthetic_corpus
+from repro.models import model as M
+from repro.training import adamw_init, make_train_step, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vicuna-7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, peak_lr=args.lr, warmup=10,
+                                   total_steps=args.steps, remat=not args.reduced))
+    corpus = synthetic_corpus(cfg.vocab_size, 100_000)
+    it = lm_batches(corpus, args.batch, args.seq)
+    t0 = time.time()
+    for i in range(args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, b)
+        if i % max(args.steps // 10, 1) == 0:
+            print(f"step {i:4d} ce={float(m['ce']):.4f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f}")
+    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, opt, step=args.steps)
+        print("saved", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

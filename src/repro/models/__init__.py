@@ -1,0 +1,20 @@
+"""Model substrate: layers, attention, MoE, SSM, and decoder assembly."""
+from repro.models.model import (
+    Cache,
+    commit_cache,
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "Cache",
+    "commit_cache",
+    "decode_step",
+    "forward_train",
+    "init_cache",
+    "init_params",
+    "prefill",
+]

@@ -1,0 +1,79 @@
+"""Primitive layers: norms, RoPE, MLPs, embeddings. Pure functions over pytrees."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), float32."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate (..., S, H, head_dim) by per-token integer ``positions`` (..., S)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv    # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ----------------------------------------------------------------------- MLP
+def mlp_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    """SwiGLU/GeGLU (gated) or plain 2-matrix MLP.
+
+    Weights are pinned to their TP spec at the use site so FSDP-stored
+    shards are gathered over 'data' (cheap) rather than the activations.
+    """
+    from repro.models.shard_utils import constrain_full
+
+    fn = jax.nn.silu if act == "silu" else jax.nn.gelu
+    w_up = constrain_full(params["w_up"], None, "model")
+    w_down = constrain_full(params["w_down"], "model", None)
+    if gated:
+        w_gate = constrain_full(params["w_gate"], None, "model")
+        g = fn(jnp.einsum("...d,df->...f", x, w_gate))
+        u = jnp.einsum("...d,df->...f", x, w_up)
+        return jnp.einsum("...f,fd->...d", g * u, w_down)
+    h = fn(jnp.einsum("...d,df->...f", x, w_up))
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {
+        "w_up": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * scale_in).astype(dtype)
+    return p
+
+
+# ----------------------------------------------------------------- embeddings
+def embed_tokens(embedding: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed(x: jax.Array, head: jax.Array) -> jax.Array:
+    """(..., d) @ (d, V) -> logits in float32."""
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32), head.astype(jnp.float32))

@@ -1,0 +1,626 @@
+"""Decoder assembly: segment layout, init, train/prefill/decode, commit.
+
+Execution model
+---------------
+Layers are grouped into *segments* of repeated identical units so the stack
+lowers as ``lax.scan`` over repeats (compile-time friendly for 56-layer
+models) with the unit unrolled inside the body. Homogeneous models have
+unit=1; gemma3 has unit=6 (5 local + 1 global); jamba unit=8 (7 mamba + 1
+attn, MoE every other layer).
+
+DSIA layer gating
+-----------------
+Every entry point takes ``gates`` — a float (num_layers,) vector. A gated-off
+layer (gate=0) contributes nothing to the residual stream and its staged
+KV/state is ignored at commit. This is how layer-sparsity and early-exit
+draft models are expressed *in the same compiled executable* (``mask`` mode).
+``slice_params`` additionally materializes a reduced-depth param pytree for a
+fixed skip set (``slice`` mode — fewer FLOPs, one compile per draft config).
+
+Cache semantics: stage-then-commit
+----------------------------------
+``decode_step`` NEVER writes the cache: it returns logits plus per-layer
+staged K/V (and per-step SSM states). After verification the engine calls
+``commit_cache`` with the accepted path; rejected drafts leave no trace.
+This is what makes speculative verification lossless and rollback-free, and
+it is ring-buffer safe for sliding-window layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import AttentionKind, BlockKind, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import apply_rope, embed_tokens, mlp_apply, mlp_init, rms_norm, unembed
+from repro.models.shard_utils import constrain, data_axis
+
+Cache = Dict[str, Any]
+
+
+# ===================================================================== layout
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    block: BlockKind
+    attn: AttentionKind
+    is_moe: bool
+    has_mlp: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    start: int                       # first layer index
+    repeats: int
+    unit: Tuple[LayerSpec, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return self.repeats * len(self.unit)
+
+
+def _layer_spec(cfg: ModelConfig, i: int) -> LayerSpec:
+    return LayerSpec(
+        block=cfg.block_kind(i),
+        attn=cfg.attention_kind(i),
+        is_moe=cfg.is_moe_layer(i) and cfg.has_mlp(i),
+        has_mlp=cfg.has_mlp(i),
+    )
+
+
+def layout(cfg: ModelConfig) -> List[Segment]:
+    """Partition layers into scan segments of repeated units."""
+    specs = [_layer_spec(cfg, i) for i in range(cfg.num_layers)]
+    n = cfg.num_layers
+    # find the smallest unit size that tiles the prefix
+    for u in range(1, n + 1):
+        if all(specs[i] == specs[i % u] for i in range(n - n % u)):
+            reps = n // u
+            segs = [Segment(0, reps, tuple(specs[:u]))]
+            if n % u:
+                segs.append(Segment(reps * u, 1, tuple(specs[reps * u :])))
+            return segs
+    return [Segment(0, 1, tuple(specs))]
+
+
+# ======================================================================= init
+def _attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (H * hd) ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, KV, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, KV, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, hd, d)) * so).astype(dtype),
+    }
+
+
+def _layer_init(key, cfg: ModelConfig, spec: LayerSpec, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if spec.block is BlockKind.ATTENTION:
+        p["attn"] = _attn_init(k1, cfg, dtype)
+    else:
+        p["mamba"] = ssm_lib.ssm_init(k1, cfg.d_model, cfg.ssm, dtype)
+    if spec.has_mlp:
+        p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+        if spec.is_moe:
+            p["moe"] = moe_lib.moe_init(k2, cfg.d_model, cfg.moe, cfg.mlp_gated, dtype)
+        else:
+            p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_gated, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 4 + len(layout(cfg)))
+    d, V = cfg.d_model, cfg.padded_vocab
+    nc = max(cfg.num_codebooks, 1)
+    embed_shape = (nc, V, d) if cfg.num_codebooks else (V, d)
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], embed_shape) * d ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        head_shape = (nc, d, V) if cfg.num_codebooks else (d, V)
+        params["lm_head"] = (
+            jax.random.normal(keys[1], head_shape) * d ** -0.5
+        ).astype(dtype)
+    segs = []
+    for si, seg in enumerate(layout(cfg)):
+        seg_keys = jax.random.split(keys[3 + si], seg.repeats * len(seg.unit)).reshape(
+            (seg.repeats, len(seg.unit)) + keys.shape[1:]
+        )
+
+        def init_repeat(ks, _unit=seg.unit):
+            return [
+                _layer_init(ks[u], cfg, spec, dtype) for u, spec in enumerate(_unit)
+            ]
+
+        segs.append(jax.vmap(init_repeat)(seg_keys))
+    params["segments"] = segs
+    return params
+
+
+# ====================================================================== cache
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_len: int,
+    *,
+    ring_window: bool = False,
+    dtype=None,
+) -> Cache:
+    """Allocate a committed cache. ``ring_window`` stores only `sliding_window`
+    slots (ring buffer) for sliding layers — required for long_500k."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    segs = []
+    for seg in layout(cfg):
+        unit_caches = []
+        for spec in seg.unit:
+            if spec.block is BlockKind.ATTENTION:
+                S_c = (
+                    min(cfg.sliding_window, max_len)
+                    if (ring_window and spec.attn is AttentionKind.SLIDING)
+                    else max_len
+                )
+                unit_caches.append(
+                    {
+                        "k": jnp.zeros((seg.repeats, batch, S_c, cfg.num_kv_heads, hd), dtype),
+                        "v": jnp.zeros((seg.repeats, batch, S_c, cfg.num_kv_heads, hd), dtype),
+                    }
+                )
+            else:
+                s = cfg.ssm
+                nh = s.num_heads(cfg.d_model)
+                din = s.d_inner(cfg.d_model)
+                gds = s.ngroups * s.d_state
+                R, K = seg.repeats, s.d_conv
+                unit_caches.append(
+                    {
+                        "ssm": jnp.zeros((R, batch, nh, s.head_dim, s.d_state), jnp.float32),
+                        "conv_x": jnp.zeros((R, batch, K - 1, din), dtype),
+                        "conv_B": jnp.zeros((R, batch, K - 1, gds), dtype),
+                        "conv_C": jnp.zeros((R, batch, K - 1, gds), dtype),
+                    }
+                )
+        segs.append(unit_caches)
+    return {"pos": jnp.zeros((batch,), jnp.int32), "segments": segs}
+
+
+# ================================================================ layer bodies
+def _attn_layer(
+    cfg: ModelConfig,
+    p: dict,
+    spec: LayerSpec,
+    h: jax.Array,                  # (B, T, d)
+    q_pos: jax.Array,              # (T,)
+    mode: str,
+    layer_cache: Optional[dict],
+    tree_mask: Optional[jax.Array],
+    gate: jax.Array,
+    attn_override: Optional[dict] = None,   # {"kind","window","sink"} DSIA
+    seq_axes: Optional[tuple] = None,       # context-parallel decode partials
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Returns (residual delta, staged/new cache entries)."""
+    B, T, _ = h.shape
+    hd = cfg.resolved_head_dim()
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    # pin weights to their TP spec at the use site: FSDP-stored weights get
+    # all-gathered over 'data' here (small), instead of GSPMD gathering the
+    # activations (measured 1.6 GiB/layer on mixtral prefill)
+    from repro.models.shard_utils import attention_head_policy, constrain_full
+
+    pol = attention_head_policy(cfg.num_heads, cfg.num_kv_heads)
+    qh = "model" if pol in ("kv", "q") else None
+    kh = "model" if pol == "kv" else None
+    wq = constrain_full(p["attn"]["wq"], None, qh, None)
+    wk = constrain_full(p["attn"]["wk"], None, kh, None)
+    wv = constrain_full(p["attn"]["wv"], None, kh, None)
+    wo = constrain_full(p["attn"]["wo"], qh, None, None)
+    q = jnp.einsum("btd,dhk->bthk", x, wq)
+    k = jnp.einsum("btd,dgk->btgk", x, wk)
+    v = jnp.einsum("btd,dgk->btgk", x, wv)
+    rope_pos = q_pos[None, :] if q_pos.ndim == 1 else q_pos   # (B, T)
+    q = apply_rope(q, rope_pos, cfg.rope_theta)
+    k = apply_rope(k, rope_pos, cfg.rope_theta)
+
+    kind = {
+        AttentionKind.FULL: "causal",
+        AttentionKind.SLIDING: "window",
+    }[spec.attn]
+    window = cfg.sliding_window
+    sink = 0
+    if attn_override is not None and spec.attn is AttentionKind.FULL:
+        # Efficient-attention DSIA (StreamingLLM-style) applies to full-attn
+        # layers only; sliding layers are already windowed.
+        kind = attn_override["kind"]
+        window = attn_override["window"]
+        sink = attn_override.get("sink", 0)
+
+    if mode in ("train", "prefill"):
+        # pin attention inputs batch-sharded/model-replicated: the cache's
+        # seq-sharded output spec otherwise back-propagates into k/v and the
+        # blockwise kv-chunk scan gathers every chunk across the mesh
+        from repro.models.shard_utils import data_axis as _dax
+        k_a = constrain(k, _dax(), None, None, None)
+        v_a = constrain(v, _dax(), None, None, None)
+        q_a = constrain(q, _dax(), None, None, None)
+        o = attn_lib.blockwise_attention(
+            q_a, k_a, v_a, q_pos, q_pos, kind=kind, window=window,
+            chunk_q=min(512, T), chunk_kv=min(1024, T),
+        )
+        staged = {"k": k, "v": v} if mode == "prefill" else None
+    else:
+        S_c = layer_cache["k"].shape[2]
+        # ring iff the allocation is capped at the window (see init_cache)
+        ring = spec.attn is AttentionKind.SLIDING and S_c <= window
+        o = attn_lib.decode_attention(
+            q,
+            layer_cache["k"],
+            layer_cache["v"],
+            layer_cache["_pos"],
+            k,
+            v,
+            q_pos,
+            tree_mask=tree_mask,
+            kind=kind,
+            window=window,
+            sink=sink,
+            ring=bool(ring),
+            chunk_kv=4096,
+            seq_axes=None if ring else seq_axes,    # ring caches are small
+        )
+        staged = {"k": k, "v": v}
+    out = jnp.einsum("bthk,hkd->btd", o, wo)
+    return out * gate, staged
+
+
+def _mamba_layer(
+    cfg: ModelConfig,
+    p: dict,
+    h: jax.Array,
+    mode: str,
+    layer_cache: Optional[dict],
+    gate: jax.Array,
+) -> Tuple[jax.Array, Optional[dict]]:
+    B, T, _ = h.shape
+    s = cfg.ssm
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    if layer_cache is None:  # train: fresh zero state
+        nh = s.num_heads(cfg.d_model)
+        din = s.d_inner(cfg.d_model)
+        gds = s.ngroups * s.d_state
+        layer_cache = {
+            "ssm": jnp.zeros((B, nh, s.head_dim, s.d_state), jnp.float32),
+            "conv_x": jnp.zeros((B, s.d_conv - 1, din), x.dtype),
+            "conv_B": jnp.zeros((B, s.d_conv - 1, gds), x.dtype),
+            "conv_C": jnp.zeros((B, s.d_conv - 1, gds), x.dtype),
+        }
+    out, new_cache, staged = ssm_lib.mamba_forward(
+        p["mamba"], x, cfg.d_model, s, layer_cache, mode=mode,
+    )
+    if mode == "train":
+        staged = None
+    return out * gate, staged
+
+
+def _mlp_layer(cfg: ModelConfig, p: dict, spec: LayerSpec, h, gate, aux_sum, mode: str):
+    x = rms_norm(h, p["norm2"], cfg.norm_eps)
+    if spec.is_moe:
+        if mode == "train":
+            moe_mode = "train"
+        elif mode == "prefill" and not cfg.moe.prefill_dropless:
+            moe_mode = "infer_grouped"     # TPU prefill: sharded capacity path
+        else:
+            moe_mode = "infer"             # dropless — batch-invariant decode
+        y, aux = moe_lib.moe_apply(
+            p["moe"], x, cfg.moe, cfg.act, cfg.mlp_gated, mode=moe_mode,
+        )
+        aux_sum = aux_sum + aux["load_balance"] + aux["router_z"]
+    else:
+        y = mlp_apply(p["mlp"], x, cfg.act, cfg.mlp_gated)
+    return y * gate, aux_sum
+
+
+# ================================================================== traversal
+def _run_stack(
+    cfg: ModelConfig,
+    params: dict,
+    h: jax.Array,
+    *,
+    mode: str,
+    cache: Optional[Cache],
+    gates: Optional[jax.Array],
+    q_pos: jax.Array,
+    tree_mask: Optional[jax.Array],
+    remat: bool = False,
+    attn_override: Optional[dict] = None,
+    seq_axes: Optional[tuple] = None,
+) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (hidden, staged_or_new_cache_segments, moe_aux_sum)."""
+    segs = layout(cfg)
+    if gates is None:
+        gates = jnp.ones((cfg.num_layers,), h.dtype)
+    gates = gates.astype(h.dtype)
+    cache_pos = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+
+    staged_segments = []
+    aux = jnp.zeros((), jnp.float32)
+
+    for si, seg in enumerate(segs):
+        U = seg.repeats * len(seg.unit)
+        g_seg = jax.lax.dynamic_slice(gates, (seg.start,), (U,)).reshape(
+            seg.repeats, len(seg.unit)
+        )
+        p_seg = params["segments"][si]
+        c_seg = cache["segments"][si] if cache is not None else None
+
+        def body(carry, xs, _unit=seg.unit):
+            hh, aux_c = carry
+            hh = constrain(hh, data_axis(), None, None)   # keep batch sharded
+            p_u, g_u, c_u = xs
+            staged_u = []
+            for u, spec in enumerate(_unit):
+                p_l = p_u[u]
+                lc = None
+                if c_u is not None:
+                    lc = dict(c_u[u])
+                    lc["_pos"] = cache_pos
+                gate = g_u[u]
+                if spec.block is BlockKind.ATTENTION:
+                    delta, staged = _attn_layer(
+                        cfg, p_l, spec, hh, q_pos, mode, lc, tree_mask, gate,
+                        attn_override, seq_axes,
+                    )
+                else:
+                    delta, staged = _mamba_layer(cfg, p_l, hh, mode, lc, gate)
+                hh = hh + delta
+                if spec.has_mlp:
+                    delta2, aux_c = _mlp_layer(cfg, p_l, spec, hh, gate, aux_c, mode)
+                    hh = hh + delta2
+                staged_u.append(staged)
+            return (hh, aux_c), tuple(staged_u)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        if seg.repeats == 1:
+            (h, aux), staged = body_fn(
+                (h, aux),
+                (
+                    jax.tree.map(lambda a: a[0], p_seg),
+                    g_seg[0],
+                    jax.tree.map(lambda a: a[0], c_seg) if c_seg is not None else None,
+                ),
+            )
+            staged = jax.tree.map(lambda a: a[None], staged)
+        else:
+            (h, aux), staged = jax.lax.scan(
+                body_fn, (h, aux), (p_seg, g_seg, c_seg)
+            )
+        staged_segments.append(staged)
+    return h, staged_segments, aux
+
+
+def _embed(cfg: ModelConfig, params: dict, batch: Dict[str, jax.Array]) -> jax.Array:
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        # (B, S, nc) codec tokens -> sum of per-codebook embeddings
+        e = sum(
+            embed_tokens(params["embed"][c], tokens[..., c])
+            for c in range(cfg.num_codebooks)
+        )
+    else:
+        e = embed_tokens(params["embed"], tokens)
+    if cfg.num_image_tokens and "image_embeds" in batch:
+        # VLM stub: splice precomputed patch embeddings where image_mask=1
+        mask = batch["image_mask"][..., None].astype(e.dtype)
+        img = batch["image_embeds"].astype(e.dtype)
+        B, S, d = e.shape
+        Ti = img.shape[1]
+        pad = jnp.zeros((B, S - Ti, d), e.dtype)
+        img_full = jnp.concatenate([img, pad], axis=1)
+        # image tokens occupy the first Ti aligned slots marked by the mask
+        e = e * (1 - mask) + img_full * mask
+    return e
+
+
+def _head(cfg: ModelConfig, params: dict, h: jax.Array) -> jax.Array:
+    h = constrain(h, data_axis(), None, None)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.num_codebooks:
+        if cfg.tie_embeddings:
+            heads = jnp.swapaxes(params["embed"], 1, 2)    # (nc, d, V)
+        else:
+            heads = params["lm_head"]
+        logits = jnp.einsum(
+            "btd,cdv->btcv", h.astype(jnp.float32), heads.astype(jnp.float32)
+        )
+    else:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = unembed(h, head)
+    if cfg.padded_vocab != cfg.vocab_size:
+        ids = jnp.arange(cfg.padded_vocab)
+        logits = jnp.where(ids < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+# =============================================================== entry points
+def forward_train(
+    cfg: ModelConfig,
+    params: dict,
+    batch: Dict[str, jax.Array],
+    *,
+    gates: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full causal forward. Returns (logits (B,S,[nc,]V) f32, moe_aux)."""
+    h = _embed(cfg, params, batch)
+    S = h.shape[1]
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    h, _, aux = _run_stack(
+        cfg, params, h, mode="train", cache=None, gates=gates,
+        q_pos=q_pos, tree_mask=None, remat=remat,
+    )
+    return _head(cfg, params, h), aux
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    batch: Dict[str, jax.Array],
+    cache: Cache,
+    *,
+    gates: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Cache]:
+    """Process the prompt, fill the cache. Returns (last-token logits, cache)."""
+    h = _embed(cfg, params, batch)
+    B, S, _ = h.shape
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    h, staged, _ = _run_stack(
+        cfg, params, h, mode="prefill", cache=cache, gates=gates,
+        q_pos=q_pos, tree_mask=None,
+    )
+    new_cache = _write_prefill(cfg, cache, staged, S)
+    logits = _head(cfg, params, h[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def _write_prefill(cfg: ModelConfig, cache: Cache, staged, S: int) -> Cache:
+    segs = layout(cfg)
+    new_segments = []
+    for si, seg in enumerate(segs):
+        new_unit = []
+        for u, spec in enumerate(seg.unit):
+            c = cache["segments"][si][u]
+            st = staged[si][u]
+            if spec.block is BlockKind.ATTENTION:
+                S_c = c["k"].shape[2]
+                k, v = st["k"], st["v"]               # (R, B, S, KV, hd)
+                if S_c >= S:
+                    newk = jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype), 0, axis=2)
+                    newv = jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype), 0, axis=2)
+                else:
+                    # ring: keep last S_c tokens arranged by pos % S_c
+                    last = S - 1
+                    slots = jnp.arange(S_c)
+                    src = last - ((last - slots) % S_c)   # position stored in slot
+                    newk = jnp.take(k, src, axis=2).astype(c["k"].dtype)
+                    newv = jnp.take(v, src, axis=2).astype(c["v"].dtype)
+                new_unit.append({"k": newk, "v": newv})
+            else:
+                # staged mamba leaves carry a length-1 step axis after batch
+                new_unit.append(
+                    jax.tree.map(
+                        lambda a, old: a[:, :, 0].astype(old.dtype), st, c
+                    )
+                )
+        new_segments.append(new_unit)
+    batch = cache["pos"].shape[0]
+    return {"pos": jnp.full((batch,), S, jnp.int32), "segments": new_segments}
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    cache: Cache,
+    tokens: jax.Array,                # (B, T) or (B, T, nc)
+    *,
+    gates: Optional[jax.Array] = None,
+    tree_mask: Optional[jax.Array] = None,   # (T, T) ancestor-or-self
+    q_pos: Optional[jax.Array] = None,       # (T,) absolute positions
+    attn_override: Optional[dict] = None,    # efficient-attention DSIA
+    seq_axes: Optional[tuple] = None,        # context-parallel cache partials
+) -> Tuple[jax.Array, Any]:
+    """Stage-only decode of T tokens against a frozen cache.
+
+    Returns (logits (B,T,[nc,]V), staged) — commit with ``commit_cache``.
+    """
+    h = _embed(cfg, params, {"tokens": tokens})
+    B, T = tokens.shape[0], tokens.shape[1]
+    if q_pos is None:
+        q_pos = cache["pos"][:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+    elif q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (B, T))
+    h, staged, _ = _run_stack(
+        cfg, params, h, mode="decode", cache=cache, gates=gates,
+        q_pos=q_pos, tree_mask=tree_mask, attn_override=attn_override,
+        seq_axes=seq_axes,
+    )
+    return _head(cfg, params, h), staged
+
+
+def commit_cache(
+    cfg: ModelConfig,
+    cache: Cache,
+    staged,
+    path_idx: jax.Array,              # (T,) or (B,T) indices into the staged T dim
+    n_accept: jax.Array,              # scalar or (B,) int32 accepted count (<= T)
+) -> Cache:
+    """Write the accepted draft path into the cache and advance pos.
+
+    Per-sequence ``path_idx``/``n_accept`` supports batched serving where
+    different sequences accept different draft prefixes.
+    """
+    segs = layout(cfg)
+    base = cache["pos"]                              # (B,)
+    B = base.shape[0]
+    if path_idx.ndim == 1:
+        path_idx = jnp.broadcast_to(path_idx[None], (B, path_idx.shape[0]))
+    T = path_idx.shape[1]
+    n_acc = jnp.broadcast_to(jnp.asarray(n_accept, jnp.int32), (B,))
+    step = jnp.arange(T, dtype=jnp.int32)
+    live = step[None] < n_acc[:, None]               # (B, T)
+    b_idx = jnp.arange(B)[:, None]
+    new_segments = []
+    for si, seg in enumerate(segs):
+        new_unit = []
+        for u, spec in enumerate(seg.unit):
+            c = cache["segments"][si][u]
+            st = staged[si][u]
+            if spec.block is BlockKind.ATTENTION:
+                S_c = c["k"].shape[2]
+                gidx = path_idx[None, :, :, None, None]          # (1,B,T,1,1)
+                # cast BEFORE the gather/scatter chain: the staged tensors
+                # cross shards on their way to the cache owners — in bf16,
+                # not f32 (halves the commit collective)
+                k = jnp.take_along_axis(st["k"].astype(c["k"].dtype), gidx, axis=2)
+                v = jnp.take_along_axis(st["v"].astype(c["v"].dtype), gidx, axis=2)
+                dest = base[:, None] + step[None]                # (B, T)
+                ring = S_c <= cfg.sliding_window and spec.attn is AttentionKind.SLIDING
+                if ring:
+                    dest = dest % S_c
+                # copy-free in-place commit: rejected slots get an
+                # OUT-OF-BOUNDS dest — jax scatter drops OOB updates
+                # (mode='drop'), so no old-row gather, no trash row, and
+                # the scatter can alias the donated cache in place.
+                dest = jnp.where(live, dest, jnp.int32(S_c))
+                ck = c["k"].at[:, b_idx, dest].set(
+                    k, mode="drop", unique_indices=True
+                )
+                cv = c["v"].at[:, b_idx, dest].set(
+                    v, mode="drop", unique_indices=True
+                )
+                new_unit.append({"k": ck, "v": cv})
+            else:
+                # staged mamba leaves: (R, B, T, ...) per-step states
+                idx = jnp.clip(n_acc - 1, 0, T - 1)              # (B,)
+                keep = (n_acc == 0)
+
+                def commit_state(a, old):
+                    idx_e = idx.reshape((1, B, 1) + (1,) * (a.ndim - 3))
+                    new = jnp.take_along_axis(a, idx_e, axis=2)[:, :, 0]
+                    keep_e = keep.reshape((1, B) + (1,) * (old.ndim - 2))
+                    return jnp.where(keep_e, old, new.astype(old.dtype))
+
+                new_unit.append(jax.tree.map(commit_state, st, c))
+        new_segments.append(new_unit)
+    return {"pos": base + n_acc, "segments": new_segments}

@@ -1,0 +1,246 @@
+"""Mamba2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunked dual form for train/prefill (intra-chunk quadratic + inter-chunk
+recurrence) and a per-token recurrence for decode. Decode over T staged draft
+tokens returns *all* intermediate states so speculative verification can
+commit the state after the accepted prefix (chain drafts; see DESIGN.md
+§Arch-applicability for why SSMs use chain rather than tree drafts).
+
+Sharding note: the input projection is stored as SEPARATE matrices
+(w_z / w_x / w_B / w_C / w_dt) rather than one fused in_proj — a fused
+projection's output dim mixes segments whose widths aren't divisible by the
+model axis, forcing GSPMD reshards at every split. Separate matrices let
+d_inner (z, x, conv channels, heads) shard cleanly over 'model' while the
+small B/C/dt projections stay replicated; out_proj contracts the sharded
+d_inner with ONE psum per layer.
+
+State pytree per layer:
+  ssm:     (B, nh, hd, ds)       recurrent state
+  conv_x:  (B, d_conv-1, din)    causal-conv tails (split like the proj)
+  conv_B:  (B, d_conv-1, g*ds)
+  conv_C:  (B, d_conv-1, g*ds)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import SSMConfig
+from repro.models.layers import rms_norm
+
+
+def ssm_init(key: jax.Array, d_model: int, s: SSMConfig, dtype) -> dict:
+    din = s.d_inner(d_model)
+    nh = s.num_heads(d_model)
+    gds = s.ngroups * s.d_state
+    ks = jax.random.split(key, 8)
+    sc = d_model ** -0.5
+    return {
+        "w_z": (jax.random.normal(ks[0], (d_model, din)) * sc).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d_model, din)) * sc).astype(dtype),
+        "w_B": (jax.random.normal(ks[2], (d_model, gds)) * sc).astype(dtype),
+        "w_C": (jax.random.normal(ks[3], (d_model, gds)) * sc).astype(dtype),
+        "w_dt": (jax.random.normal(ks[4], (d_model, nh)) * sc).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (s.d_conv, din)) * s.d_conv**-0.5).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (s.d_conv, gds)) * s.d_conv**-0.5).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (s.d_conv, gds)) * s.d_conv**-0.5).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, nh))).astype(jnp.float32),
+        "norm_w": jnp.zeros((din,), dtype),
+        "out_proj": (jax.random.normal(jax.random.fold_in(key, 9), (din, d_model)) * din**-0.5).astype(dtype),
+    }
+
+
+def _conv_full(xs: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C) with kernel (K, C)."""
+    K = w.shape[0]
+    pads = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, i : i + xs.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _conv_continued(stream: jax.Array, tail: jax.Array, w: jax.Array):
+    """Conv with a carried tail; returns (outputs aligned to stream, new tail)."""
+    K = w.shape[0]
+    S = stream.shape[1]
+    full = jnp.concatenate([tail.astype(stream.dtype), stream], axis=1)
+    out = _conv_full(full, w)[:, -S:]
+    return out, full[:, -(K - 1):]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) -> (..., L, L) lower-tri segment sums: out[i,j]=sum_{j<t<=i} x_t."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B, S, nh, hd) conv'd inputs
+    dt: jax.Array,       # (B, S, nh) softplus'd
+    A: jax.Array,        # (nh,) negative
+    B_: jax.Array,       # (B, S, g, ds)
+    C_: jax.Array,       # (B, S, g, ds)
+    init_state: jax.Array,   # (B, nh, hd, ds)
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hd), final_state). Compute in float32."""
+    Bsz, S, nh, hd = x.shape
+    g, ds = B_.shape[2], B_.shape[3]
+    rep = nh // g
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc, L = Sp // chunk, chunk
+
+    xc = x.reshape(Bsz, nc, L, nh, hd).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, L, nh).astype(jnp.float32)
+    Bc = B_.reshape(Bsz, nc, L, g, ds).astype(jnp.float32)
+    Cc = C_.reshape(Bsz, nc, L, g, ds).astype(jnp.float32)
+
+    dA = dtc * A                                       # (B,nc,L,nh)
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+    x_dt = xc * dtc[..., None]
+
+    # --- intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))  # (B,nc,nh,L,L)
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc)
+    CB = jnp.repeat(CB, rep, axis=2)                   # groups -> heads
+    scores = CB * Lmat
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, x_dt)
+
+    # --- per-chunk input states
+    decay = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)     # (B,nc,L,nh)
+    Bh = jnp.repeat(Bc, rep, axis=3)                   # groups -> heads (B,nc,L,nh,ds)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    # states_c = sum_s B_s (x_dt)_s decay_s  -> (B,nc,nh,hd,ds)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bh, decay, x_dt)
+
+    # --- inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])         # (B,nc,nh)
+
+    def step(carry, xs):
+        st = carry                                     # (B,nh,hd,ds)
+        dec, new = xs                                  # (B,nh), (B,nh,hd,ds)
+        out = st                                       # state BEFORE this chunk
+        st = st * dec[..., None, None] + new
+        return st, out
+
+    final, prev_states = jax.lax.scan(
+        step,
+        init_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B,nc,nh,hd,ds)
+
+    # --- contribution of carried-in state
+    state_decay = jnp.exp(dA_cum)                      # (B,nc,L,nh)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, nh, hd)[:, :S]
+    return y, final
+
+
+def mamba_forward(
+    params: dict,
+    h: jax.Array,                  # (B, S, d) block input (post-norm)
+    d_model: int,
+    s: SSMConfig,
+    layer_cache: dict,             # {"ssm", "conv_x", "conv_B", "conv_C"}
+    *,
+    mode: str,                     # "train" | "prefill" | "decode"
+) -> Tuple[jax.Array, dict, dict]:
+    """Returns (out (B,S,d), new_cache, staged).
+
+    ``staged`` carries per-step states (B, T, ...) in decode mode for the
+    speculative commit; in train/prefill it equals the finals with a
+    length-1 step axis.
+    """
+    B, S, d = h.shape
+    nh = s.num_heads(d_model)
+    hd = s.head_dim
+    din = s.d_inner(d_model)
+    g, ds = s.ngroups, s.d_state
+
+    z = jnp.einsum("bsd,de->bse", h, params["w_z"])
+    x_raw = jnp.einsum("bsd,de->bse", h, params["w_x"])
+    B_raw = jnp.einsum("bsd,de->bse", h, params["w_B"])
+    C_raw = jnp.einsum("bsd,de->bse", h, params["w_C"])
+    dt_raw = jnp.einsum("bsd,de->bse", h, params["w_dt"])
+    A = -jnp.exp(params["A_log"])                      # (nh,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    ssm0 = layer_cache["ssm"]
+    if mode in ("train", "prefill"):
+        xc, tail_x = _conv_continued(x_raw, layer_cache["conv_x"], params["conv_x"])
+        Bc, tail_B = _conv_continued(B_raw, layer_cache["conv_B"], params["conv_B"])
+        Cc, tail_C = _conv_continued(C_raw, layer_cache["conv_C"], params["conv_C"])
+        x = xc.reshape(B, S, nh, hd)
+        B_ = Bc.reshape(B, S, g, ds)
+        C_ = Cc.reshape(B, S, g, ds)
+        y, final = ssd_chunked(x, dt, A, B_, C_, ssm0, s.chunk_size)
+        y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+        new_cache = {"ssm": final, "conv_x": tail_x, "conv_B": tail_B, "conv_C": tail_C}
+        staged = jax.tree.map(lambda a: a[:, None], new_cache)
+    else:
+        K = params["conv_x"].shape[0]
+
+        def step(carry, xs):
+            cx, cB, cC, st = carry
+            x_t, B_t, C_t, dt_t = xs                   # (B,din),(B,gds),(B,gds),(B,nh)
+            wx = jnp.concatenate([cx, x_t[:, None]], axis=1)       # (B,K,din)
+            wB = jnp.concatenate([cB, B_t[:, None]], axis=1)
+            wC = jnp.concatenate([cC, C_t[:, None]], axis=1)
+            xc_t = jax.nn.silu(jnp.sum(wx * params["conv_x"], axis=1))
+            Bc_t = jax.nn.silu(jnp.sum(wB * params["conv_B"], axis=1))
+            Cc_t = jax.nn.silu(jnp.sum(wC * params["conv_C"], axis=1))
+            x_h = xc_t.reshape(B, nh, hd).astype(jnp.float32)
+            B_h = Bc_t.reshape(B, g, ds).astype(jnp.float32)
+            C_h = Cc_t.reshape(B, g, ds).astype(jnp.float32)
+            dA_t = jnp.exp(dt_t * A)                   # (B,nh)
+            Bx = jnp.einsum("bgn,bhp->bhpn", B_h, x_h * dt_t[..., None])
+            st = st * dA_t[..., None, None] + Bx
+            Ch = jnp.repeat(C_h, nh // g, axis=1)      # (B,nh,ds)
+            y_t = jnp.einsum("bhpn,bhn->bhp", st, Ch)
+            y_t = y_t + params["D"][None, :, None] * x_h
+            carry = (wx[:, 1:], wB[:, 1:], wC[:, 1:], st)
+            return carry, (y_t, carry[0], carry[1], carry[2], st)
+
+        init = (
+            layer_cache["conv_x"].astype(x_raw.dtype),
+            layer_cache["conv_B"].astype(x_raw.dtype),
+            layer_cache["conv_C"].astype(x_raw.dtype),
+            ssm0.astype(jnp.float32),
+        )
+        (ncx, ncB, ncC, nst), (ys, ax, aB, aC, ast) = jax.lax.scan(
+            step,
+            init,
+            (
+                jnp.moveaxis(x_raw, 1, 0),
+                jnp.moveaxis(B_raw, 1, 0),
+                jnp.moveaxis(C_raw, 1, 0),
+                jnp.moveaxis(dt, 1, 0),
+            ),
+        )
+        y = jnp.moveaxis(ys, 0, 1)                     # (B,S,nh,hd)
+        new_cache = {"ssm": nst, "conv_x": ncx, "conv_B": ncB, "conv_C": ncC}
+        staged = {
+            "ssm": jnp.moveaxis(ast, 0, 1),
+            "conv_x": jnp.moveaxis(ax, 0, 1),
+            "conv_B": jnp.moveaxis(aB, 0, 1),
+            "conv_C": jnp.moveaxis(aC, 0, 1),
+        }
+
+    yf = y.reshape(B, S, din)
+    yf = rms_norm(yf * jax.nn.silu(z.astype(jnp.float32)), params["norm_w"], 1e-5)
+    out = jnp.einsum("bse,ed->bsd", yf.astype(h.dtype), params["out_proj"])
+    return out, new_cache, staged

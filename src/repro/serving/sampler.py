@@ -1,0 +1,37 @@
+"""Token samplers: greedy / temperature / top-k / top-p (host-side numpy)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def sample_token(
+    logits: np.ndarray,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+    rng: Optional[np.random.Generator] = None,
+) -> int:
+    """Sample one token from (V,) logits. temperature=0 -> greedy."""
+    logits = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    rng = rng or np.random.default_rng()
+    x = logits / temperature
+    if top_k > 0 and top_k < len(x):
+        kth = np.partition(x, -top_k)[-top_k]
+        x = np.where(x < kth, -np.inf, x)
+    x = x - x.max()
+    p = np.exp(x)
+    p /= p.sum()
+    if top_p < 1.0:
+        order = np.argsort(-p)
+        cum = np.cumsum(p[order])
+        cutoff = np.searchsorted(cum, top_p) + 1
+        mask = np.zeros_like(p)
+        mask[order[:cutoff]] = 1.0
+        p = p * mask
+        p /= p.sum()
+    return int(rng.choice(len(p), p=p))

@@ -1,0 +1,60 @@
+"""Request scheduling for the batched server: FIFO admission into fixed
+batch slots with continuous batching (a finished slot is refilled on the
+next step boundary)."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray
+    max_new_tokens: int
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+
+class RequestScheduler:
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}   # slot -> request
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> List[int]:
+        """Fill free slots from the queue; returns newly admitted slots."""
+        new = []
+        for slot in range(self.max_batch):
+            if slot not in self.active and self.queue:
+                self.active[slot] = self.queue.popleft()
+                new.append(slot)
+        return new
+
+    def retire(self) -> List[Request]:
+        done = [s for s, r in self.active.items() if r.done or r.remaining <= 0]
+        out = []
+        for s in done:
+            r = self.active.pop(s)
+            r.done = True
+            self.finished.append(r)
+            out.append(r)
+        return out
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue or self.active)

@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, train step, checkpointing."""
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, cosine_lr
+from repro.training.train_step import loss_fn, make_train_step
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "loss_fn",
+    "make_train_step",
+    "load_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,53 @@
+"""Checkpointing: pytree <-> flat npz with structure manifest (offline-safe)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = flat
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_checkpoint(path: str, params: Any, opt_state: Any = None, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    arrays, _ = _flatten_with_paths(params)
+    np.savez(os.path.join(path, "params.npz"), **arrays)
+    if opt_state is not None:
+        oarr, _ = _flatten_with_paths(opt_state)
+        np.savez(os.path.join(path, "opt.npz"), **oarr)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": int(step)}, f)
+
+
+def load_checkpoint(path: str, params_template: Any, opt_template: Any = None):
+    """Restore into the shapes/treedef of the provided templates."""
+    data = np.load(os.path.join(path, "params.npz"))
+    arrays, treedef = _flatten_with_paths(params_template)
+    restored = {}
+    for k in arrays:
+        if k not in data:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        restored[k] = data[k]
+    leaves = [jnp.asarray(restored[k]) for k in arrays]
+    params = jax.tree.unflatten(treedef, leaves)
+    out = [params]
+    if opt_template is not None:
+        odata = np.load(os.path.join(path, "opt.npz"))
+        oarrays, otreedef = _flatten_with_paths(opt_template)
+        oleaves = [jnp.asarray(odata[k]) for k in oarrays]
+        out.append(jax.tree.unflatten(otreedef, oleaves))
+    with open(os.path.join(path, "meta.json")) as f:
+        out.append(json.load(f)["step"])
+    return tuple(out)

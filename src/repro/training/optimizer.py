@@ -1,0 +1,84 @@
+"""AdamW with decoupled weight decay + cosine schedule — pure JAX pytrees.
+
+Optimizer state shards like the params (the dry-run applies the same
+PartitionSpec tree to ``mu``/``nu``), giving ZeRO-style sharded moments for
+free along the `model` axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_lr(
+    step: jax.Array,
+    *,
+    peak: float = 3e-4,
+    warmup: int = 100,
+    total: int = 10_000,
+    floor: float = 0.1,
+) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    *,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, AdamWState]:
+    # global-norm clip
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        decay = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (update + decay)
+        return new_p.astype(p.dtype), m, v
+
+    p_flat, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    m_flat = treedef.flatten_up_to(state.mu)
+    v_flat = treedef.flatten_up_to(state.nu)
+    res = [upd(p, g, m, v) for p, g, m, v in zip(p_flat, g_flat, m_flat, v_flat)]
+    new_params = treedef.unflatten([r[0] for r in res])
+    new_mu = treedef.unflatten([r[1] for r in res])
+    new_nu = treedef.unflatten([r[2] for r in res])
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,70 @@
+"""Train step: causal-LM cross entropy + MoE aux losses + AdamW update."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models import model as M
+from repro.training.optimizer import AdamWState, adamw_update, cosine_lr
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: Any,
+    batch: Dict[str, jax.Array],
+    *,
+    remat: bool = True,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token CE (shift-by-one inside) + MoE aux. ``batch['tokens']`` is
+    (B, S) or (B, S, nc); optional ``loss_mask`` (B, S-1)."""
+    logits, aux = M.forward_train(cfg, params, batch, remat=remat)
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        targets = tokens[:, 1:]                      # (B, S-1, nc)
+        lg = logits[:, :-1]                          # (B, S-1, nc, V)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        nll = nll.mean(axis=-1)                      # mean over codebooks
+    else:
+        targets = tokens[:, 1:]
+        lg = logits[:, :-1]
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        ce = nll.mean()
+    else:
+        m = mask.astype(jnp.float32)
+        ce = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    total = ce + aux
+    return total, {"ce": ce, "moe_aux": aux, "loss": total}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    remat: bool = True,
+):
+    """Returns jit-able train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True
+        )(params)
+        lr = cosine_lr(opt_state.step, peak=peak_lr, warmup=warmup, total=total_steps)
+        new_params, new_opt = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        metrics["grad_norm"] = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        return new_params, new_opt, metrics
+
+    return train_step

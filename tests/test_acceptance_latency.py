@@ -1,0 +1,65 @@
+"""EMA acceptance tracker (Eq. 4) + BLR latency model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.acceptance import AcceptanceTracker
+from repro.core.latency import BayesianLinearLatency, CostTracker, roofline_features
+
+
+def test_ema_update_matches_eq4():
+    t = AcceptanceTracker(lam=0.7, window=20, prior=0.5)
+    t.set_prior("x", 0.8)
+    t.observe("x", True)
+    # recent = 1.0 -> a = 0.7*0.8 + 0.3*1.0
+    assert t.alpha("x") == pytest.approx(0.7 * 0.8 + 0.3 * 1.0)
+    t.observe("x", False)
+    # recent = 0.5 over the 2-entry window
+    prev = 0.7 * 0.8 + 0.3
+    assert t.alpha("x") == pytest.approx(0.7 * prev + 0.3 * 0.5)
+
+
+def test_window_limits_history():
+    t = AcceptanceTracker(window=5)
+    for _ in range(50):
+        t.observe("x", False)
+    for _ in range(5):
+        t.observe("x", True)
+    # recent window is all-True now
+    assert t.alpha("x") > 0.2
+    assert t.counts("x") == 5
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_alpha_always_in_unit_interval(outcomes):
+    t = AcceptanceTracker()
+    for o in outcomes:
+        t.observe("c", o)
+        assert 0.0 <= t.alpha("c") <= 1.0
+
+
+def test_blr_recovers_linear_model():
+    rng = np.random.default_rng(0)
+    w_true = np.array([0.5, 2.0, 1.0, 3.0])
+    blr = BayesianLinearLatency(dim=4, noise=1e-4)
+    for _ in range(200):
+        x = np.concatenate([[1.0], rng.random(3)])
+        blr.observe(x, float(w_true @ x) + rng.normal(0, 1e-3))
+    assert np.allclose(blr.weights, w_true, atol=0.05)
+    mean, var = blr.predict_with_var([1.0, 0.5, 0.5, 0.5])
+    assert var > 0
+
+
+def test_roofline_features_units():
+    f = roofline_features(197e12, 819e9, 50e9)
+    assert f[1] == pytest.approx(1.0)   # one second of compute
+    assert f[2] == pytest.approx(1.0)
+    assert f[3] == pytest.approx(1.0)
+
+
+def test_cost_tracker_ratio():
+    c = CostTracker()
+    c.observe_target(0.1, tokens=1)
+    c.observe("d", 0.03, tokens=1)
+    assert c.c_hat("d") == pytest.approx(0.3, rel=0.05)

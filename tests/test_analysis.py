@@ -1,0 +1,70 @@
+"""HLO cost parser calibration + roofline report semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo_costs import total_costs
+from repro.analysis.roofline import RooflineReport, collective_bytes
+
+
+def test_scan_trip_count_correction():
+    """cost_analysis counts a while body once; our parser multiplies."""
+    f = lambda a, b: jax.lax.scan(lambda h, w: (h @ w, None), a, b)[0]
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    compiled = jax.jit(f).lower(x, ws).compile()
+    got = total_costs(compiled.as_text())["flops"]
+    assert got == pytest.approx(2 * 64 ** 3 * 10, rel=0.01)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    assert ca["flops"] == pytest.approx(2 * 64 ** 3, rel=0.01)  # the XLA quirk
+
+
+def test_unrolled_matches_scan():
+    def unrolled(a, b):
+        for i in range(10):
+            a = a @ b[i]
+        return a
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    t1 = total_costs(jax.jit(unrolled).lower(x, ws).compile().as_text())["flops"]
+    f = lambda a, b: jax.lax.scan(lambda h, w: (h @ w, None), a, b)[0]
+    t2 = total_costs(jax.jit(f).lower(x, ws).compile().as_text())["flops"]
+    assert t1 == pytest.approx(t2, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def f(a, b):
+        def outer(h, _):
+            h2, _ = jax.lax.scan(lambda hh, w: (hh @ w, None), h, b)
+            return h2, None
+        return jax.lax.scan(outer, a, None, length=3)[0]
+
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    got = total_costs(jax.jit(f).lower(x, ws).compile().as_text())["flops"]
+    assert got == pytest.approx(2 * 32 ** 3 * 15, rel=0.01)
+
+
+def test_collective_regex():
+    txt = """
+  %ag = bf16[4,1024,128]{2,1,0} all-gather(%x), dimensions={0}
+  %ar = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(%a, %b), to_apply=%sum
+  %cp = f32[16]{0} collective-permute(%y), source_target_pairs={{0,1}}
+"""
+    out = collective_bytes(txt)
+    assert out["all-gather"] == 4 * 1024 * 128 * 2
+    assert out["all-reduce"] == 2 * 8 * 128 * 4
+    assert out["collective-permute"] == 16 * 4
+
+
+def test_roofline_bottleneck_selection():
+    r = RooflineReport("x", flops=197e12, bytes_hbm=1.0, coll_bytes={})
+    assert r.bottleneck == "compute" and r.t_compute == pytest.approx(1.0)
+    r2 = RooflineReport("y", flops=1.0, bytes_hbm=819e9, coll_bytes={})
+    assert r2.bottleneck == "memory" and r2.t_memory == pytest.approx(1.0)
+    r3 = RooflineReport("z", flops=1.0, bytes_hbm=1.0, coll_bytes={"all-reduce": int(50e9)})
+    assert r3.bottleneck == "collective" and r3.t_collective == pytest.approx(1.0)

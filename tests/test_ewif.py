@@ -1,0 +1,79 @@
+"""EWIF theory (§3, App. B): closed forms, the paper's worked example,
+Monte-Carlo agreement, and bound properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ewif
+
+
+def test_paper_worked_example():
+    """§4.2: greedy always picks M_d2 -> 1.554; HC(M_d1,M_d2) -> 1.615."""
+    v_greedy, k = ewif.best_sd(0.8, 0.3)
+    assert abs(v_greedy - 1.554) < 2e-3
+    assert k == 3
+    v_hc = ewif.t_hc(0.9, 0.8, 0.4, 0.3, 2, 2)
+    assert abs(v_hc - 1.615) < 2e-3
+    # the HC schedule beats the greedy schedule, as the paper argues
+    assert v_hc > v_greedy
+
+
+def test_t_sd_limits():
+    # k=0 degenerates to AR (factor 1)
+    assert ewif.t_sd(0.5, 0.3, 0) == pytest.approx(1.0)
+    # perfect acceptance, free draft -> k+1 tokens per verify
+    assert ewif.t_sd(1.0, 0.0, 7) == pytest.approx(8.0)
+
+
+@given(
+    alpha=st.floats(0.05, 0.95),
+    c=st.floats(0.01, 0.9),
+    k=st.integers(1, 12),
+)
+@settings(max_examples=60, deadline=None)
+def test_mc_agrees_with_closed_form(alpha, c, k):
+    closed = ewif.t_sd(alpha, c, k)
+    mc = ewif.simulate_ewif_sd(alpha, c, k, steps=40_000, seed=1)
+    assert mc == pytest.approx(closed, rel=0.05)
+
+
+@given(alpha=st.floats(0.1, 0.9), c=st.floats(0.02, 0.5))
+@settings(max_examples=30, deadline=None)
+def test_expected_accepted_monotone_in_alpha(alpha, c):
+    lo = ewif.expected_accepted(alpha * 0.9, 5)
+    hi = ewif.expected_accepted(alpha, 5)
+    assert hi >= lo
+
+
+def test_hc_bound_monotone_in_alpha_d1():
+    """Higher intermediate-draft acceptance tolerates a higher cost (Fig 1c)."""
+    bounds = [
+        ewif.hc_bound_c_d1_numeric(a, 0.4, 0.01, k_max=10) for a in (0.5, 0.7, 0.9)
+    ]
+    assert bounds[0] <= bounds[1] <= bounds[2]
+
+
+def test_vc_bound_positive_region():
+    b = ewif.vc_bound_c_d1_numeric(0.8, 0.5, 0.5, 0.01, n_max=4, k_max=8)
+    assert 0.0 < b < 1.0
+
+
+def test_dytc_objective_prefers_cheap_high_alpha():
+    good = ewif.dytc_step_objective(0.9, 0.2, 3, 0.3, 0.01)
+    bad = ewif.dytc_step_objective(0.4, 0.6, 3, 0.3, 0.01)
+    assert good > bad
+
+
+def test_greedy_vs_admissible_counterexample():
+    """The Eq.-5 objective must NOT always agree with the greedy objective
+    (that disagreement is DyTC's entire point)."""
+    a1, c1, a2, c2 = 0.9, 0.4, 0.8, 0.3
+    g1 = ewif.greedy_step_objective(a1, c1, 1)
+    g2 = ewif.greedy_step_objective(a2, c2, 1)
+    assert g2 > g1            # greedy prefers M_d2
+    o1 = max(ewif.dytc_step_objective(a1, c1, k, 0.3, 0.01) for k in range(1, 6))
+    o2 = max(ewif.dytc_step_objective(a2, c2, k, 0.3, 0.01) for k in range(1, 6))
+    # the admissible objective ranks them differently or at least closer
+    assert (o1 > o2) or abs(o1 - o2) / max(o1, o2) < abs(g1 - g2) / max(g1, g2)

@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import quantized_matmul, verify_attention
+from repro.kernels import ref as R
+from repro.kernels.int8_matmul import quantize_cols, quantize_rows
+
+
+def _mk(B, T, H, KV, hd, S, dtype, seed=0, pos=None, tree=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    kn = jax.random.normal(ks[3], (B, T, KV, hd), dtype)
+    vn = jax.random.normal(ks[4], (B, T, KV, hd), dtype)
+    pos = S - 5 if pos is None else pos
+    kv_pos = jnp.broadcast_to(
+        jnp.where(jnp.arange(S)[None] < pos, jnp.arange(S)[None], -1).astype(jnp.int32),
+        (B, S),
+    )
+    q_pos = (pos + jnp.arange(T))[None].repeat(B, 0).astype(jnp.int32)
+    tm = np.tril(np.ones((T, T), bool))
+    if tree and T >= 4:
+        tm[3, 2] = False               # a branch
+    tmask = jnp.broadcast_to(jnp.asarray(tm), (B, T, T))
+    return q, kc, vc, kv_pos, q_pos, kn, vn, tmask
+
+
+def _oracle(q, kc, vc, kv_pos, q_pos, kn, vn, tmask, **kw):
+    B, T, H, hd = q.shape
+    KV = kc.shape[2]
+    rep = H // KV
+    qr = q.reshape(B, T, KV, rep, hd).transpose(0, 2, 3, 1, 4).reshape(B, KV, rep * T, hd)
+    ref = R.ref_verify_attention(
+        qr, kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3),
+        kv_pos, jnp.tile(q_pos, (1, rep)),
+        kn.transpose(0, 2, 1, 3), vn.transpose(0, 2, 1, 3), tmask, **kw,
+    )
+    return ref.reshape(B, KV, rep, T, hd).transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd)
+
+
+@pytest.mark.parametrize(
+    "B,T,H,KV,hd,S",
+    [
+        (1, 4, 2, 1, 32, 64),      # MQA
+        (2, 8, 4, 2, 64, 128),     # GQA
+        (1, 16, 8, 8, 80, 100),    # MHA, non-128 hd, ragged S
+        (2, 8, 4, 4, 128, 256),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_verify_attention_matches_oracle(B, T, H, KV, hd, S, dtype):
+    args = _mk(B, T, H, KV, hd, S, dtype)
+    out = verify_attention(*args, interpret=True)
+    ref = _oracle(*[a.astype(jnp.float32) if a.dtype in (jnp.bfloat16,) else a for a in args])
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("kind,window,sink", [("window", 16, 0), ("streaming", 8, 2)])
+def test_verify_attention_masked_kinds(kind, window, sink):
+    args = _mk(1, 4, 4, 2, 64, 96, jnp.float32, seed=3)
+    out = verify_attention(*args, kind=kind, window=window, sink=sink, interpret=True)
+    ref = _oracle(*args, kind=kind, window=window, sink=sink)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_verify_attention_empty_cache():
+    """pos=0 (nothing committed): only the tree part contributes."""
+    args = _mk(1, 4, 2, 2, 32, 64, jnp.float32, pos=0)
+    out = verify_attention(*args, interpret=True)
+    ref = _oracle(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("M,K,N", [(8, 16, 8), (100, 200, 300), (128, 128, 128), (1, 512, 64)])
+def test_int8_matmul_matches_oracle(M, K, N):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (M, K))
+    w = jax.random.normal(k2, (K, N))
+    out = quantized_matmul(x, w, interpret=True)
+    xq, xs = quantize_rows(x)
+    wq, ws = quantize_cols(w)
+    ref = R.ref_int8_matmul(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+    # and the quantization error vs f32 is small
+    rel = float(jnp.mean(jnp.abs(out - x @ w)) / jnp.mean(jnp.abs(x @ w)))
+    assert rel < 0.05

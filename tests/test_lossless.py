@@ -1,0 +1,110 @@
+"""THE paper invariant: every scheduler's greedy output is token-identical
+to autoregressive decoding — lossless acceleration (§5.1)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import get_config
+from repro.core.cascade import (
+    ARScheduler,
+    HCScheduler,
+    PLDScheduler,
+    SDScheduler,
+    TreeScheduler,
+    TreeVCScheduler,
+    VCHCScheduler,
+    VCScheduler,
+)
+from repro.core.dsia import build_hierarchy, layer_sparsity, early_exit, streaming_attention
+from repro.core.dytc import DyTCScheduler
+from repro.core.engine import SpecEngine
+from repro.models import model as M
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=8)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+N_TOK = 24
+
+
+def ar_reference(prompt):
+    eng = SpecEngine(CFG, PARAMS, max_len=256)
+    eng.start(prompt)
+    return ARScheduler(eng).generate(N_TOK)
+
+
+def run_sched(prompt, builder):
+    eng = SpecEngine(CFG, PARAMS, max_len=256)
+    eng.start(prompt)
+    return builder(eng).generate(N_TOK), eng
+
+
+PROMPT = np.array([5, 6, 7, 8, 9, 5, 6, 7, 8, 9, 5, 6, 7], np.int32)
+LS4 = layer_sparsity(CFG, 0.4)
+LS6 = layer_sparsity(CFG, 0.6)
+
+SCHEDULERS = {
+    "PLD": lambda e: PLDScheduler(e, k=6),
+    "SD-LS": lambda e: SDScheduler(e, LS4, k=4),
+    "SD-EE": lambda e: SDScheduler(e, early_exit(CFG, 0.5), k=4),
+    "VC": lambda e: VCScheduler(e, LS4, n=2, k2=5),
+    "HC": lambda e: HCScheduler(e, LS4, k1=3, k2=4),
+    "VC+HC": lambda e: VCHCScheduler(e, LS4),
+    "Tree": lambda e: TreeScheduler(e, LS4, depth=3),
+    "Tr+VC": lambda e: TreeVCScheduler(e, LS4, depth=3),
+    "DyTC": lambda e: DyTCScheduler(e, build_hierarchy(CFG)),
+    "DyTC-mask": None,  # filled below
+}
+
+
+def _dytc_mask(e):
+    return DyTCScheduler(e, build_hierarchy(CFG))
+
+
+@pytest.mark.parametrize("name", [k for k in SCHEDULERS if SCHEDULERS[k]])
+def test_scheduler_lossless(name):
+    ref = ar_reference(PROMPT)
+    out, eng = run_sched(PROMPT, SCHEDULERS[name])
+    assert out == ref, f"{name} diverged from AR"
+    assert eng.stats["rounds"] <= N_TOK   # never worse than AR in rounds
+
+
+def test_mask_exec_lossless():
+    """gates-as-input (mask) execution must match slice execution."""
+    ref = ar_reference(PROMPT)
+    eng = SpecEngine(CFG, PARAMS, max_len=256, draft_exec="mask")
+    eng.start(PROMPT)
+    out = DyTCScheduler(eng, build_hierarchy(CFG)).generate(N_TOK)
+    assert out == ref
+
+
+def test_streaming_dsia_lossless():
+    """Efficient-attention drafting changes only the DRAFTS, never the output."""
+    ref = ar_reference(PROMPT)
+    eng = SpecEngine(CFG, PARAMS, max_len=256, draft_exec="mask")
+    eng.start(PROMPT)
+    spec = streaming_attention(CFG, window=8, sink=2)
+    out = SDScheduler(eng, spec, k=4).generate(N_TOK)
+    assert out == ref
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    plen=st.integers(4, 24),
+    rep=st.integers(1, 4),
+)
+@settings(max_examples=8, deadline=None)
+def test_dytc_lossless_random_prompts(seed, plen, rep):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(2, CFG.vocab_size, size=plen)
+    prompt = np.tile(base, rep).astype(np.int32)[:48]
+    ref = ar_reference(prompt)
+    out, _ = run_sched(prompt, SCHEDULERS["DyTC"])
+    assert out == ref
+
+
+def test_dytc_accepts_more_than_ar():
+    """On a repetitive prompt, DyTC must average > 1 token per round."""
+    out, eng = run_sched(PROMPT, SCHEDULERS["DyTC"])
+    assert eng.stats["accepted_tokens"] / eng.stats["rounds"] > 1.1

@@ -1,0 +1,55 @@
+"""Prompt Lookup Decoding: retrieval correctness properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pld import PromptLookup
+
+
+def test_basic_repeat():
+    pld = PromptLookup(max_ngram=3)
+    ctx = np.array([1, 2, 3, 9, 9, 1, 2, 3], np.int32)
+    out = pld.propose(ctx, 3)
+    # suffix [1,2,3] matched at position 0; continuation is [9,9,...]
+    assert list(out[:2]) == [9, 9]
+
+
+def test_no_match():
+    pld = PromptLookup()
+    out = pld.propose(np.array([1, 2, 3, 4, 5], np.int32), 4)
+    assert len(out) == 0
+
+
+def test_prefers_longest_ngram():
+    pld = PromptLookup(max_ngram=4)
+    #       [7,8] -> 1   ...   [5,6,7,8] -> 2
+    ctx = np.array([7, 8, 1, 0, 5, 6, 7, 8, 2, 0, 5, 6, 7, 8], np.int32)
+    out = pld.propose(ctx, 1)
+    assert list(out) == [2]     # 4-gram match wins over 2-gram
+
+
+@given(
+    data=st.lists(st.integers(0, 6), min_size=8, max_size=60),
+    k=st.integers(1, 6),
+)
+@settings(max_examples=80, deadline=None)
+def test_proposal_is_a_real_continuation(data, k):
+    """Whatever PLD proposes must literally appear after a matching n-gram
+    occurrence inside the context (retrieval soundness)."""
+    pld = PromptLookup(max_ngram=4)
+    ctx = np.asarray(data, np.int32)
+    toks, conf = pld.propose_with_confidence(ctx, k)
+    if len(toks) == 0:
+        return
+    assert 0 < conf <= 1.0
+    n = len(ctx)
+    found = False
+    for ng in range(pld.max_ngram, 0, -1):
+        if ng >= n:
+            continue
+        suffix = list(ctx[n - ng:])
+        for s in range(0, n - ng):
+            if list(ctx[s : s + ng]) == suffix:
+                cont = list(ctx[s + ng : s + ng + len(toks)])
+                if cont == list(toks):
+                    found = True
+    assert found

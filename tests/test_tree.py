@@ -1,0 +1,79 @@
+"""Draft token tree: ancestor-closure masks, P_acc bookkeeping, flatten."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import DraftTree, bucket_for, chain_tree
+from repro.core.verify import greedy_accept_tree
+
+
+def build_random_tree(structure):
+    """structure: list of parent indices (clamped) defining node additions."""
+    t = DraftTree(root_token=1)
+    for i, p in enumerate(structure):
+        parent = p % len(t)
+        t.add_child(parent, token=i + 2, config="c", alpha=0.8)
+    return t
+
+
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=25))
+@settings(max_examples=80, deadline=None)
+def test_mask_is_ancestor_closure(structure):
+    t = build_random_tree(structure)
+    tokens, rel, mask, real = t.flatten()
+    n = len(t)
+    for i in range(n):
+        # reference ancestor set
+        anc = set()
+        j = i
+        while j != -1:
+            anc.add(j)
+            j = t.parents[j]
+        for j in range(n):
+            assert mask[i, j] == (j in anc)
+    # padded slots see only themselves, nothing sees them
+    T = bucket_for(n)
+    for i in range(n, T):
+        assert mask[i, i] and mask[i].sum() == 1
+        assert not mask[:n, i].any()
+    # rel positions equal depth
+    assert (rel[:n] == np.asarray(t.depth)).all()
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=25))
+@settings(max_examples=50, deadline=None)
+def test_p_acc_is_product_along_path(structure):
+    t = build_random_tree(structure)
+    for i in range(len(t)):
+        assert abs(t.p_acc[i] - 0.8 ** t.depth[i]) < 1e-9
+
+
+def test_best_leaf_prefers_high_p_acc():
+    t = DraftTree(0)
+    a = t.add_child(0, 1, "c", 0.9)
+    b = t.add_child(0, 2, "c", 0.3)
+    assert t.best_active_leaf() in (0,)   # root has P=1
+    t.deactivate(0)
+    assert t.best_active_leaf() == a
+
+
+def test_greedy_accept_walks_matching_children():
+    t = chain_tree(5, [7, 9, 11], "c", 0.8)
+    # target agrees with tokens 7, 9 then diverges
+    nxt = np.array([7, 9, 99, 0])
+    path, bonus = greedy_accept_tree(t, nxt)
+    assert path == [0, 1, 2]
+    assert bonus == 99
+
+
+def test_greedy_accept_tree_branch():
+    t = DraftTree(5)
+    c1 = t.add_child(0, 7, "c", 0.5)
+    c2 = t.add_child(0, 8, "c", 0.5)
+    g = t.add_child(c2, 3, "c", 0.5)
+    nxt = np.zeros(4, np.int64)
+    nxt[0] = 8          # target picks the second branch
+    nxt[c2] = 3
+    nxt[g] = 42
+    path, bonus = greedy_accept_tree(t, nxt)
+    assert path == [0, c2, g]
+    assert bonus == 42

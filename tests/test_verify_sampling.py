@@ -1,0 +1,46 @@
+"""Speculative sampling (chain) is distribution-preserving (lossless in law)."""
+import numpy as np
+import pytest
+
+from repro.core.verify import spec_sample_chain, softmax
+
+
+def test_accept_all_when_identical():
+    rng = np.random.default_rng(0)
+    V, k = 8, 4
+    p = softmax(np.random.default_rng(1).normal(size=(k + 1, V)))
+    # draft distribution == target distribution and draft tokens are the
+    # argmax -> p_t/p_d = 1 -> always accepted
+    toks = p[:k].argmax(-1)
+    n, nxt = spec_sample_chain(toks, p[:k], p, rng)
+    assert n == k
+
+
+def test_reject_impossible_token():
+    rng = np.random.default_rng(0)
+    V = 4
+    target = np.zeros((2, V))
+    target[0] = [0.0, 1.0, 0.0, 0.0]    # target only emits token 1
+    target[1] = [0.25] * 4
+    draft = np.array([[1.0, 0.0, 0.0, 0.0]])
+    n, nxt = spec_sample_chain(np.array([0]), draft, target, rng)
+    assert n == 0
+    assert nxt == 1                     # residual = target
+
+
+def test_marginal_distribution_preserved():
+    """Empirical check of the Leviathan guarantee on the first token."""
+    rng = np.random.default_rng(42)
+    V = 5
+    g = np.random.default_rng(7)
+    target = softmax(g.normal(size=(2, V)))
+    draft = softmax(g.normal(size=(1, V)))
+    counts = np.zeros(V)
+    trials = 30_000
+    for _ in range(trials):
+        d_tok = g.choice(V, p=draft[0])
+        n, nxt = spec_sample_chain(np.array([d_tok]), draft, target, rng)
+        tok = d_tok if n >= 1 else nxt
+        counts[tok] += 1
+    emp = counts / trials
+    assert np.abs(emp - target[0]).max() < 0.015
