@@ -25,6 +25,7 @@ def main() -> None:
     import ablation_dytc
     import fig1_bounds
     import fig3_methods
+    import serve_batched
     import table1_speedup
     import table2_accepted
 
@@ -34,6 +35,7 @@ def main() -> None:
         "table1": lambda: table1_speedup.main(args.tokens),
         "table2": lambda: table2_accepted.main(args.tokens),
         "fig3": lambda: fig3_methods.main(args.tokens),
+        "serve": lambda: serve_batched.main(args.tokens),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     os.makedirs(args.out, exist_ok=True)

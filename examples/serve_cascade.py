@@ -3,10 +3,11 @@
   PYTHONPATH=src python examples/serve_cascade.py
 
 Serves a small model over a stream of Spec-Bench-style requests (mixed
-tasks): continuous batching into fixed slots, per-slot PLD + batched
-layer-sparse neural drafting, one joint verify per step, per-sequence
-commit. Reports throughput (tokens/step) and verifies every completed
-request against its own single-stream AR reference.
+tasks): continuous batching into fixed slots, per-slot PLD + one fused
+lax.scan neural chain draft per round, one joint verify per step,
+per-sequence commit with per-slot adaptive draft lengths. Reports
+throughput (tokens/step) and verifies every completed request against its
+own single-stream AR reference.
 """
 import dataclasses
 import sys
@@ -23,7 +24,7 @@ from repro.core.dsia import layer_sparsity
 from repro.core.engine import SpecEngine
 from repro.data import SPEC_TASKS, make_task_prompts
 from repro.models import init_params
-from repro.serving import BatchedSpecServer, Request, RequestScheduler
+from repro.serving import BatchedSpecServer, Request, RequestScheduler, ServeLoop
 
 cfg = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=6)
 params = init_params(cfg, jax.random.PRNGKey(0))
@@ -41,35 +42,24 @@ sched = RequestScheduler(max_batch=MAX_BATCH)
 for r in requests:
     sched.submit(r)
 
-slot_req = {}
 t0 = time.perf_counter()
-steps = 0
-while sched.busy:
-    for slot in sched.admit():
-        req = sched.active[slot]
-        srv.add_request(slot, req.prompt)
-        slot_req[slot] = req
-    out = srv.step()
-    steps += 1
-    for slot, toks in out.items():
-        if slot in slot_req and not slot_req[slot].done:
-            slot_req[slot].generated.extend(toks)
-    for req in sched.retire():
-        req.generated = req.generated[: req.max_new_tokens]
-        slot = next(s for s, r in slot_req.items() if r is req)
-        srv.live[slot] = False
+finished = ServeLoop(srv, sched).run()
 elapsed = time.perf_counter() - t0
+steps = srv.stats["steps"]
 
 print(f"served {len(requests)} requests in {steps} steps, {elapsed:.1f}s")
 print(f"throughput: {srv.stats['tokens'] / steps:.2f} accepted tokens/step "
       f"(batch={MAX_BATCH})")
+print(f"draft dispatches/round: "
+      f"{srv.stats['draft_dispatches'] / max(steps, 1):.2f} "
+      f"(fused scan; seed issued one per draft token)")
 
 # verify losslessness of every completed request
 bad = 0
-for req in sched.finished:
+for req in finished:
     eng = SpecEngine(cfg, params, max_len=512)
     eng.start(req.prompt)
     ref = ARScheduler(eng).generate(len(req.generated))
     bad += ref != req.generated
-print(f"lossless requests: {len(sched.finished) - bad}/{len(sched.finished)}")
+print(f"lossless requests: {len(finished) - bad}/{len(finished)}")
 assert bad == 0

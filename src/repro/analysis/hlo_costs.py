@@ -32,8 +32,11 @@ COLLECTIVES = (
 _COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
 _OP_DEF = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
 _SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# operands may carry their type, e.g. dot(f32[64,64]{1,0} %a, f32[64,64] %b)
+_OPERAND_TYPE = r"(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?\s+)?"
 _DOT = re.compile(
-    r"dot\(\s*%([\w\.\-]+),\s*%([\w\.\-]+)\)"
+    r"dot\(\s*" + _OPERAND_TYPE + r"%([\w\.\-]+)\s*,\s*"
+    + _OPERAND_TYPE + r"%([\w\.\-]+)\s*\)"
 )
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 _LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")

@@ -33,6 +33,15 @@ class AcceptanceTracker:
     def alpha(self, config: str) -> float:
         return self._alpha.get(config, self.prior)
 
+    def reset(self, config: str, alpha0: Optional[float] = None) -> None:
+        """Drop a configuration's history (e.g. a server slot being reused
+        by a new request under continuous batching); optionally re-seed the
+        cold-start prior."""
+        self._alpha.pop(config, None)
+        self._hist.pop(config, None)
+        if alpha0 is not None:
+            self.set_prior(config, alpha0)
+
     def counts(self, config: str) -> int:
         return len(self._hist.get(config, ()))
 

@@ -49,6 +49,57 @@ def fake_quant_int8(params: dict) -> dict:
     return jax.tree.map(q, params)
 
 
+def chain_draft_scan(
+    cfg: ModelConfig,
+    steps: int,                       # static scan trip count (<= k)
+    params: dict,
+    cache: dict,                      # batched committed cache (scratch copy semantics)
+    pending: jax.Array,               # (B,) int32 last verified token per slot
+    chains: jax.Array,                # (B, k) int32, PLD-prefilled prefix
+    have: jax.Array,                  # (B,) int32 tokens already proposed (PLD)
+    limit: jax.Array,                 # (B,) int32 per-slot adaptive draft cap
+    gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused k-step neural chain drafting: one ``lax.scan`` over draft steps.
+
+    Each step re-decodes the fixed (B, k+1) block ``[pending, chain]`` under
+    a causal tree mask — earlier draft tokens are visible to later positions
+    through the staged-KV block path (the same mechanism verification uses),
+    so the committed cache is READ-ONLY here: no scratch commits, no cache
+    copy, and the whole loop is a single dispatch per proposal round instead
+    of ``k`` host-synchronized decode calls. Step ``j`` writes the argmax at
+    position ``j`` into chain position ``j`` only where ``have <= j <
+    limit``; PLD-prefilled positions are never overwritten, and slots past
+    their adaptive ``limit`` stop contributing draft tokens. Unfilled tail
+    positions hold stale tokens during the scan — the causal mask keeps them
+    invisible to every filled position.
+
+    The block recompute costs O(k^2) token-forwards per round; for chain
+    drafting at the paper's k <= 5 that is cheaper on every backend we run
+    than the O(k) state-carrying alternative (``M.decode_commit_token``),
+    which must functionally copy the cache into the scan carry. Drafts never
+    write the real cache either way, so losslessness is untouched.
+
+    Returns (chains, have) with ``have = max(have, min(limit, steps))``.
+    """
+    B, K = chains.shape
+    toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, K+1)
+    mask = jnp.tril(jnp.ones((K + 1, K + 1), bool))
+
+    def body(toks, j):
+        logits, _ = M.decode_step(
+            cfg, params, cache, toks, gates=gates, tree_mask=mask
+        )
+        nxt = jnp.argmax(logits, -1).astype(toks.dtype)          # (B, K+1)
+        fill = (have <= j) & (j < limit)
+        col = jnp.where(fill, nxt[:, j], toks[:, j + 1])
+        return toks.at[:, j + 1].set(col), None
+
+    toks, _ = jax.lax.scan(body, toks, jnp.arange(steps, dtype=jnp.int32))
+    have = jnp.maximum(have, jnp.minimum(limit, jnp.int32(steps)))
+    return toks[:, 1:], have
+
+
 class SpecEngine:
     """Single-sequence (B=1) speculative engine; the batched path lives in
     repro.serving.server."""

@@ -92,3 +92,26 @@ class CostTracker:
         if self._target_lat is None or self._target_lat <= 0:
             return lat if lat < 10 else default   # prior stored as ratio
         return min(lat / self._target_lat, 10.0)
+
+
+def best_chain_length(
+    alpha: float, c: float, k_max: int, t_min: float = 1.0
+) -> int:
+    """Per-slot adaptive draft length — the chain-cascade analogue of DyTC's
+    Eq. 5 objective for the batched server (where trees degrade to chains,
+    App. A): pick the k maximizing the chain EWIF
+
+        T_SD(alpha, c, k) = (1 - alpha^{k+1}) / ((1 - alpha)(ck + 1)),
+
+    and stop drafting entirely (return 0) when even the best k's expected
+    speedup falls below ``t_min`` — a slot whose draft economics have gone
+    bad degrades to plain AR inside the same verify round.
+    """
+    from repro.core.ewif import t_sd
+
+    best_k, best_v = 0, 1.0          # k=0 == autoregressive, speedup 1.0
+    for k in range(1, max(k_max, 0) + 1):
+        v = t_sd(alpha, c, k)
+        if v > best_v:
+            best_k, best_v = k, v
+    return best_k if best_v >= t_min else 0

@@ -558,6 +558,40 @@ def decode_step(
     return _head(cfg, params, h), staged
 
 
+def decode_commit_token(
+    cfg: ModelConfig,
+    params: dict,
+    cache: Cache,
+    token: jax.Array,                 # (B,) one token per sequence
+    *,
+    gates: Optional[jax.Array] = None,
+    attn_override: Optional[dict] = None,
+) -> Tuple[jax.Array, Cache]:
+    """Scan-friendly single-token decode: decode one token per sequence and
+    immediately commit its staged KV/state, advancing ``pos`` by one.
+
+    Unlike ``decode_step`` this WRITES the cache. It exists for the draft
+    side of chain speculation, where the k-step drafting loop runs as one
+    jitted ``lax.scan`` with the cache as carry — every drafted token must be
+    visible to the next draft step without a host round trip. Draft scratch
+    caches are discarded after proposing, so the losslessness invariant
+    (only verified tokens reach the *committed* cache) is untouched.
+
+    Returns (logits (B, V), new_cache). Codebook (audio) models are not
+    supported on this path — their tokens are (B, nc), not scalar.
+    """
+    logits, staged = decode_step(
+        cfg, params, cache, token[:, None], gates=gates,
+        attn_override=attn_override,
+    )
+    B = token.shape[0]
+    path_idx = jnp.zeros((B, 1), jnp.int32)
+    new_cache = commit_cache(
+        cfg, cache, staged, path_idx, jnp.ones((B,), jnp.int32)
+    )
+    return logits[:, 0], new_cache
+
+
 def commit_cache(
     cfg: ModelConfig,
     cache: Cache,

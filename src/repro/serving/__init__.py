@@ -1,6 +1,9 @@
 """Serving runtime: samplers, request scheduling, batched speculative server."""
 from repro.serving.sampler import sample_token
-from repro.serving.scheduler import Request, RequestScheduler
+from repro.serving.scheduler import Request, RequestScheduler, ServeLoop
 from repro.serving.server import BatchedSpecServer
 
-__all__ = ["sample_token", "Request", "RequestScheduler", "BatchedSpecServer"]
+__all__ = [
+    "sample_token", "Request", "RequestScheduler", "ServeLoop",
+    "BatchedSpecServer",
+]

@@ -1,6 +1,8 @@
 """Request scheduling for the batched server: FIFO admission into fixed
 batch slots with continuous batching (a finished slot is refilled on the
-next step boundary)."""
+next step boundary). ``ServeLoop`` is the admit/step/retire glue between a
+``RequestScheduler`` and a ``BatchedSpecServer`` — examples, benchmarks and
+tests all drive serving through it."""
 from __future__ import annotations
 
 import dataclasses
@@ -58,3 +60,41 @@ class RequestScheduler:
     @property
     def busy(self) -> bool:
         return bool(self.queue or self.active)
+
+
+class ServeLoop:
+    """Continuous-batching driver: admits queued requests into server slots,
+    steps the server, routes per-slot tokens back to their requests, and
+    releases slots of finished requests (freeing their per-slot adaptive
+    draft-length estimators for the next admission)."""
+
+    def __init__(self, server, scheduler: RequestScheduler):
+        self.server = server
+        self.scheduler = scheduler
+        self._slot_req: Dict[int, Request] = {}
+
+    def step_once(self) -> Dict[int, List[int]]:
+        for slot in self.scheduler.admit():
+            req = self.scheduler.active[slot]
+            self.server.add_request(slot, req.prompt)
+            self._slot_req[slot] = req
+        out = self.server.step()
+        for slot, toks in out.items():
+            req = self._slot_req.get(slot)
+            if req is not None and not req.done:
+                req.generated.extend(toks)
+        for req in self.scheduler.retire():
+            req.generated = req.generated[: req.max_new_tokens]
+            slot = next(s for s, r in self._slot_req.items() if r is req)
+            del self._slot_req[slot]
+            self.server.release(slot)
+        return out
+
+    def run(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Serve until the queue drains (or ``max_steps``); returns the
+        finished requests in completion order."""
+        steps = 0
+        while self.scheduler.busy and (max_steps is None or steps < max_steps):
+            self.step_once()
+            steps += 1
+        return self.scheduler.finished

@@ -6,9 +6,40 @@ server implements that production path: per-slot PLD proposals merged with a
 batched layer-sparse neural draft, verified jointly in one target forward,
 committed per-sequence (divergent accepted lengths are supported by the
 (B,)-pos cache).
+
+Fused drafting
+--------------
+The k-step neural chain draft runs as ONE jitted ``lax.scan`` over draft
+steps (``core.engine.chain_draft_scan``): each step re-decodes the fixed
+(B, k+1) block under a causal tree mask, so later draft steps see earlier
+drafted tokens through the staged-KV block path entirely on device, with
+the committed cache read-only. One dispatch per proposal round replaces
+the seed's k ``_decode`` calls with a host sync between each.
+Verification + acceptance + commit are likewise one jitted call
+(``_verify_accept_commit``): the per-slot Python acceptance loop is
+replaced by a vectorized cumprod over the chain-match mask. Drafts never
+write the real cache — only target verification does — so serving stays
+lossless.
+
+Adaptive chain-cascade drafting (DyTC Eq. 5 analogue)
+-----------------------------------------------------
+Each slot carries an EMA acceptance estimate of its first NEURAL draft
+token (Eq. 4, ``AcceptanceTracker`` keyed per slot; PLD outcomes are
+excluded so the alpha prices the same drafter whose cost c is measured
+from the neural scan) and the server maintains an online
+draft-cost coefficient c = draft-token-latency / verify-round-latency
+(``CostTracker``). Per round, each slot's draft length is the k maximizing
+the chain EWIF T_SD(alpha_b, c, k) (``latency.best_chain_length``); a slot
+whose best expected speedup falls below ``t_min`` stops neural drafting
+(limit 0) and degrades to plain AR inside the same batched verify — the
+chain analogue of DyTC's stop rule. PLD proposals are effectively free
+(host-side retrieval, fixed-width verify), so they are never truncated by
+the adaptive limit. Slot estimates reset on request admission (continuous
+batching reuses slots across requests).
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -17,9 +48,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig
+from repro.core.acceptance import AcceptanceTracker
 from repro.core.dsia import DraftSpec
+from repro.core.engine import chain_draft_scan
+from repro.core.latency import CostTracker, best_chain_length
 from repro.core.pld import PromptLookup
 from repro.models import model as M
+
+
+def _verify_accept_commit(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    pending: jax.Array,               # (B,) int32
+    chains: jax.Array,                # (B, k) int32
+    have: jax.Array,                  # (B,) int32
+    live: jax.Array,                  # (B,) bool
+):
+    """One fused target round: verify [pending, chain] jointly, accept the
+    longest matching prefix per slot (vectorized — no per-slot Python), and
+    commit the accepted path. Returns (cache, nxt, n_chain, new_pending)."""
+    toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, k+1)
+    logits, staged = M.decode_step(cfg, params, cache, toks)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, k+1)
+    B, K = chains.shape
+    ok = (chains == nxt[:, :K]) & (jnp.arange(K)[None] < have[:, None])
+    # accepted chain prefix length: leading run of matches
+    n_chain = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    n_chain = jnp.where(live, n_chain, 0)
+    n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)    # + pending
+    new_pending = jnp.take_along_axis(nxt, n_chain[:, None], axis=1)[:, 0]
+    path_idx = jnp.broadcast_to(
+        jnp.arange(K + 1, dtype=jnp.int32)[None], (B, K + 1)
+    )
+    new_cache = M.commit_cache(cfg, cache, staged, path_idx, n_acc)
+    return new_cache, nxt, n_chain, new_pending
 
 
 class BatchedSpecServer:
@@ -31,27 +94,44 @@ class BatchedSpecServer:
         max_len: int = 1024,
         draft_k: int = 4,
         draft_spec: Optional[DraftSpec] = None,   # None -> PLD-only drafting
+        fused: bool = True,            # False: seed-style per-step drafting (A/B)
+        adaptive: bool = True,         # per-slot adaptive draft length
+        t_min: float = 1.05,           # min expected chain speedup to keep drafting
+        min_obs: int = 4,              # per-slot observations before adapting
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
         self.draft_spec = draft_spec
+        self.fused = fused
+        self.adaptive = adaptive
+        self.t_min = t_min
+        self.min_obs = min_obs
         self.pld = PromptLookup(max_draft=draft_k)
+        self.acceptance = AcceptanceTracker()
+        self.costs = CostTracker()
         self.cache = M.init_cache(cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype))
         self.pending = np.zeros(max_batch, np.int64)
         self.contexts: List[List[int]] = [[] for _ in range(max_batch)]
         self.live = np.zeros(max_batch, bool)
+        self._pld_have = np.zeros(max_batch, np.int32)   # PLD prefix per round
 
         self._prefill1 = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
+        # legacy (unfused) drafting path — kept for A/B benchmarking
         self._decode = jax.jit(
             lambda p, c, t, g: M.decode_step(cfg, p, c, t, gates=g)
         )
-        self._commit = jax.jit(lambda c, st, pi, na: M.commit_cache(cfg, c, st, pi, na))
+        self._verify = jax.jit(functools.partial(_verify_accept_commit, cfg))
+        self._draft_fns: Dict[int, callable] = {}   # scan steps -> jitted fn
         self._gates = (
             None
             if draft_spec is None
             else jnp.asarray(draft_spec.gates_array(cfg.num_layers))
         )
-        self.stats = {"steps": 0, "tokens": 0, "target_calls": 0}
+        self.stats = {
+            "steps": 0, "tokens": 0, "target_calls": 0,
+            "draft_dispatches": 0, "draft_time": 0.0, "verify_time": 0.0,
+            "drafted_tokens": 0,
+        }
 
     # ------------------------------------------------------------ admission
     def add_request(self, slot: int, prompt: np.ndarray) -> None:
@@ -63,6 +143,17 @@ class BatchedSpecServer:
         self.pending[slot] = int(np.argmax(np.asarray(last)[0]))
         self.contexts[slot] = list(map(int, prompt))
         self.live[slot] = True
+        # slot estimators restart with the draft's cold-start prior —
+        # continuous batching reuses slots across unrelated requests
+        prior = self.draft_spec.prior_alpha if self.draft_spec else 0.5
+        self.acceptance.reset(self._slot_key(slot), alpha0=prior)
+
+    def release(self, slot: int) -> None:
+        """Mark a slot free (its request finished or was cancelled)."""
+        self.live[slot] = False
+
+    def _slot_key(self, slot: int) -> str:
+        return f"chain:{slot}"
 
     def _write_slot(self, slot: int, c1: dict) -> None:
         # cache leaves: segments (R, B, ...) and pos (B,)
@@ -74,11 +165,36 @@ class BatchedSpecServer:
         pos = self.cache["pos"].at[slot].set(c1["pos"][0])
         self.cache = {"pos": pos, "segments": new_segments}
 
+    # ----------------------------------------------------- adaptive lengths
+    def _slot_limit(self, slot: int) -> int:
+        """Neural draft budget for a slot this round (PLD is never capped)."""
+        if self.draft_spec is None:
+            return 0
+        key = self._slot_key(slot)
+        if not self.adaptive or self.acceptance.counts(key) < self.min_obs:
+            return self.k
+        alpha = self.acceptance.alpha(key)
+        c = self.costs.c_hat(
+            "chain_draft", default=float(self.draft_spec.prior_c)
+        )
+        return best_chain_length(alpha, max(c, 1e-3), self.k, self.t_min)
+
+    def _draft_fn(self, steps: int):
+        fn = self._draft_fns.get(steps)
+        if fn is None:
+            fn = jax.jit(functools.partial(chain_draft_scan, self.cfg, steps))
+            self._draft_fns[steps] = fn
+        return fn
+
     # ------------------------------------------------------------- stepping
-    def _propose(self) -> np.ndarray:
-        """Per-slot draft chains (B, k) — PLD first, neural fill-in."""
-        chains = np.zeros((self.B, self.k), np.int64)
+    def _propose(self):
+        """Per-slot draft chains (B, k) — PLD first, neural fill-in.
+
+        Returns (chains (B,k) int32, have (B,) int32). The neural fill-in is
+        a single fused scan dispatch covering every slot and draft step."""
+        chains = np.zeros((self.B, self.k), np.int32)
         have = np.zeros(self.B, np.int32)
+        limit = np.zeros(self.B, np.int32)
         for b in range(self.B):
             if not self.live[b]:
                 continue
@@ -86,50 +202,100 @@ class BatchedSpecServer:
             toks = self.pld.propose(ctx, self.k)
             chains[b, : len(toks)] = toks
             have[b] = len(toks)
-        if self.draft_spec is not None and (have < self.k).any():
-            # batched neural chain drafting to fill remaining positions
-            for j in range(int(have.min()), self.k):
-                toks = np.concatenate(
-                    [self.pending[:, None], chains[:, :j]], axis=1
-                ).astype(np.int32)
-                logits, _ = self._decode(
-                    self.params, self.cache, jnp.asarray(toks), self._gates
-                )
-                nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
-                fill = have <= j
-                chains[fill, j] = nxt[fill]
-                have = np.maximum(have, np.where(fill, j + 1, have))
+            limit[b] = self._slot_limit(b)
+        # remember where PLD ends per slot: the acceptance estimator that
+        # prices the NEURAL draft must only see neural-token outcomes
+        self._pld_have = have.copy()
+        if self.draft_spec is None:
+            return chains, have
+        if self.fused:
+            return self._propose_fused(chains, have, limit)
+        return self._propose_legacy(chains, have, limit)
+
+    def _propose_fused(self, chains, have, limit):
+        # one jitted lax.scan over draft steps; trip count = the largest
+        # per-slot budget still needing neural fill (<= k distinct compiles)
+        steps = int(np.max(np.where(limit > have, limit, 0), initial=0))
+        if steps == 0:
+            return chains, have
+        t0 = time.perf_counter()
+        ch_d, hv_d = jax.block_until_ready(
+            self._draft_fn(steps)(
+                self.params, self.cache,
+                jnp.asarray(self.pending, jnp.int32),
+                jnp.asarray(chains), jnp.asarray(have), jnp.asarray(limit),
+                self._gates,
+            )
+        )
+        dt = time.perf_counter() - t0
+        chains, have = np.asarray(ch_d), np.asarray(hv_d)
+        self.stats["draft_dispatches"] += 1
+        self.stats["draft_time"] += dt
+        self.stats["drafted_tokens"] += steps
+        # per-draft-step latency (the whole batch advances one token per
+        # step) -> c_hat = draft-step / verify-round, the c in T_SD
+        self.costs.observe("chain_draft", dt, tokens=steps)
+        return chains, have
+
+    def _propose_legacy(self, chains, have, limit):
+        # seed behavior: one _decode dispatch per draft step, host syncs
+        # between steps (kept only as the A/B baseline for benchmarks)
+        need = self.live & (limit > have)
+        if not need.any():
+            return chains, have
+        lo, hi = int(have[need].min()), int(limit[need].max())
+        for j in range(lo, hi):
+            toks = np.concatenate(
+                [self.pending[:, None], chains[:, :j]], axis=1
+            ).astype(np.int32)
+            t0 = time.perf_counter()
+            logits, _ = self._decode(
+                self.params, self.cache, jnp.asarray(toks), self._gates
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            self.stats["draft_dispatches"] += 1
+            self.stats["draft_time"] += time.perf_counter() - t0
+            fill = (have <= j) & (j < limit)
+            chains[fill, j] = nxt[fill]
+            have = np.maximum(have, np.where(fill, j + 1, have)).astype(np.int32)
         return chains, have
 
     def step(self) -> Dict[int, List[int]]:
         """One speculative round for the whole batch; returns new tokens."""
         chains, have = self._propose()
-        toks = np.concatenate([self.pending[:, None], chains], axis=1).astype(np.int32)
-        logits, staged = self._decode(self.params, self.cache, jnp.asarray(toks), None)
+        t0 = time.perf_counter()
+        new_cache, nxt, n_chain, new_pending = jax.block_until_ready(
+            self._verify(
+                self.params, self.cache,
+                jnp.asarray(self.pending, jnp.int32),
+                jnp.asarray(chains), jnp.asarray(have),
+                jnp.asarray(self.live),
+            )
+        )
+        dt = time.perf_counter() - t0
+        self.cache = new_cache
         self.stats["target_calls"] += 1
-        nxt = np.asarray(jnp.argmax(logits, -1))           # (B, k+1)
+        self.stats["verify_time"] += dt
+        self.costs.observe_target(dt, tokens=1)   # per-round target latency
 
-        n_acc = np.ones(self.B, np.int32)                  # pending always accepted
-        new_pending = np.zeros_like(self.pending)
+        n_chain = np.asarray(n_chain)
+        new_pending = np.asarray(new_pending)
         out: Dict[int, List[int]] = {}
         for b in range(self.B):
             if not self.live[b]:
-                n_acc[b] = 0
                 continue
-            acc = [int(self.pending[b])]
-            j = 0
-            while j < have[b] and int(chains[b, j]) == int(nxt[b, j]):
-                acc.append(int(chains[b, j]))
-                j += 1
-            n_acc[b] = len(acc)
-            new_pending[b] = int(nxt[b, j])
+            acc = [int(self.pending[b])] + [int(t) for t in chains[b, : n_chain[b]]]
             self.contexts[b].extend(acc)
             out[b] = acc
             self.stats["tokens"] += len(acc)
-        path_idx = jnp.broadcast_to(jnp.arange(self.k + 1), (self.B, self.k + 1))
-        self.cache = self._commit(
-            self.cache, staged, path_idx, jnp.asarray(n_acc)
-        )
-        self.pending = np.where(self.live, new_pending, self.pending)
+            # Eq. 4 EMA over the NEURAL drafter (the alpha paired with the
+            # neural scan's c in T_SD): observe the first neural position's
+            # outcome, and only when its PLD prefix was fully accepted —
+            # otherwise the neural token was never evaluated (DyTC's
+            # parent-accepted rule). PLD outcomes never enter this alpha.
+            pld_n = int(self._pld_have[b])
+            if have[b] > pld_n and n_chain[b] >= pld_n:
+                self.acceptance.observe(self._slot_key(b), n_chain[b] > pld_n)
+        self.pending = np.where(self.live, new_pending.astype(np.int64), self.pending)
         self.stats["steps"] += 1
         return out

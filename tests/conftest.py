@@ -1,5 +1,6 @@
 import os
 import sys
+import warnings
 
 # NOTE: no --xla_force_host_platform_device_count here — smoke tests and
 # benches must see the single real CPU device (dry-run sets its own flags).
@@ -7,6 +8,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import pytest
+
+# Property-based test modules guard their import with
+# ``pytest.importorskip("hypothesis", ...)`` so a missing dev dependency
+# skips them (with a reason) instead of killing collection for the whole
+# suite. Surface one loud session-level warning here so the skip cause is
+# obvious in the run header.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    warnings.warn(
+        "hypothesis is not installed — property-based test modules will be "
+        "SKIPPED. Install dev deps with: pip install -r requirements-dev.txt",
+        stacklevel=0,
+    )
 
 
 @pytest.fixture(scope="session")

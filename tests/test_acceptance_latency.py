@@ -1,6 +1,7 @@
 """EMA acceptance tracker (Eq. 4) + BLR latency model."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="needs hypothesis — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.acceptance import AcceptanceTracker

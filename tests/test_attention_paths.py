@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="needs hypothesis — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import blockwise_attention, decode_attention
@@ -80,9 +81,9 @@ SPLIT_KV_SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from repro.models.attention import decode_attention
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.sharding.set_mesh(mesh)
+    from repro.launch.mesh import make_mesh_compat, set_global_mesh
+    mesh = make_mesh_compat((2, 4), ("data", "model"))
+    set_global_mesh(mesh)
     B, T, H, KV, hd, S = 4, 8, 8, 2, 32, 64
     ks = jax.random.split(jax.random.PRNGKey(0), 8)
     q = jax.random.normal(ks[0], (B, T, H, hd))

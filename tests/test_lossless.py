@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="needs hypothesis — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.config import get_config

@@ -1,5 +1,7 @@
 """Prompt Lookup Decoding: retrieval correctness properties."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="needs hypothesis — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pld import PromptLookup

@@ -1,0 +1,200 @@
+"""Fused batched drafting: single-dispatch proposals, batched-vs-B=1
+equivalence, and adaptive per-slot draft lengths (chain DyTC analogue)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.cascade import ARScheduler
+from repro.core.dsia import layer_sparsity
+from repro.core.engine import SpecEngine
+from repro.core.latency import best_chain_length
+from repro.models import model as M
+from repro.serving import Request, RequestScheduler, ServeLoop
+from repro.serving.server import BatchedSpecServer
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+SPEC = layer_sparsity(CFG, 0.5)
+
+
+def _random_prompts(n, length, seed=0):
+    """High-entropy prompts: no n-gram reuse, so PLD proposes nothing and
+    every draft token must come from the neural chain scan."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, CFG.vocab_size - 1, size=length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _repetitive_prompts():
+    return [
+        np.array([5, 6, 7, 8] * 4, np.int32),
+        np.array([9, 10, 11] * 5, np.int32),
+        np.array([3, 4] * 6, np.int32),
+    ]
+
+
+def test_batched_matches_single_stream():
+    """Fused + adaptive batched serving must emit exactly the B=1 greedy
+    stream for every slot (losslessness under divergent accepted lengths)."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=3, max_len=256, draft_k=4,
+                            draft_spec=SPEC, fused=True, adaptive=True,
+                            min_obs=1)
+    prompts = _repetitive_prompts()
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    gen = {i: [] for i in range(3)}
+    for _ in range(8):
+        for b, toks in srv.step().items():
+            gen[b].extend(toks)
+    for i, p in enumerate(prompts):
+        eng = SpecEngine(CFG, PARAMS, max_len=256)
+        eng.start(p)
+        ref = ARScheduler(eng).generate(len(gen[i]))
+        assert ref == gen[i], f"slot {i} diverged"
+
+
+def test_equivalence_when_drafting_stops():
+    """A t_min no slot can meet forces adaptive limits to 0 (pure AR +
+    PLD inside the batched verify) — output must be unchanged. Random
+    prompts keep PLD silent, so every round observes a neural outcome."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, fused=True, adaptive=True,
+                            min_obs=1, t_min=1e9)
+    prompts = _random_prompts(2, 16, seed=3)
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    gen = {i: [] for i in range(2)}
+    for _ in range(6):
+        for b, toks in srv.step().items():
+            gen[b].extend(toks)
+    for i, p in enumerate(prompts):
+        eng = SpecEngine(CFG, PARAMS, max_len=256)
+        eng.start(p)
+        ref = ARScheduler(eng).generate(len(gen[i]))
+        assert ref == gen[i], f"slot {i} diverged"
+    # after warmup the unmeetable threshold must have stopped neural drafting
+    assert srv._slot_limit(0) == 0 and srv._slot_limit(1) == 0
+
+
+def test_one_draft_dispatch_per_propose_round():
+    """Regression: the fused path issues exactly ONE jitted drafting
+    dispatch per propose round (the seed issued one per draft token)."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, fused=True, adaptive=False)
+    calls = []
+    orig = srv._draft_fn
+
+    def counting(steps):
+        fn = orig(steps)
+
+        def wrapped(*a, **kw):
+            calls.append(steps)
+            return fn(*a, **kw)
+
+        return wrapped
+
+    srv._draft_fn = counting
+    for i, p in enumerate(_random_prompts(2, 24)):
+        srv.add_request(i, p)
+    n_rounds = 5
+    for _ in range(n_rounds):
+        srv.step()
+    assert len(calls) == n_rounds                      # one dispatch per round
+    assert srv.stats["draft_dispatches"] == n_rounds
+    assert srv.stats["target_calls"] == n_rounds       # one verify per round
+    assert len(srv._draft_fns) <= srv.k                # bounded compile cache
+    # PLD silent -> every round observes a first-NEURAL-token outcome
+    assert srv.acceptance.counts(srv._slot_key(0)) == n_rounds
+
+    # contrast: the legacy (seed) loop pays one dispatch per draft token
+    leg = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, fused=False, adaptive=False)
+    for i, p in enumerate(_random_prompts(2, 24, seed=1)):
+        leg.add_request(i, p)
+    for _ in range(n_rounds):
+        leg.step()
+    assert leg.stats["draft_dispatches"] == n_rounds * leg.k
+
+
+def test_fused_and_legacy_paths_agree():
+    """Same greedy tokens whether drafting is fused or per-step (both are
+    lossless; drafts only change speed)."""
+    outs = []
+    for fused in (True, False):
+        srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256,
+                                draft_k=4, draft_spec=SPEC, fused=fused,
+                                adaptive=False)
+        for i, p in enumerate(_repetitive_prompts()[:2]):
+            srv.add_request(i, p)
+        gen = {0: [], 1: []}
+        for _ in range(6):
+            for b, toks in srv.step().items():
+                gen[b].extend(toks)
+        outs.append(gen)
+    assert outs[0] == outs[1]
+
+
+def test_decode_commit_token_matches_decode_plus_commit():
+    """The scan-friendly single-token entry point is exactly decode_step +
+    commit_cache of one accepted token (the O(k) state-carrying drafting
+    alternative for large k)."""
+    import jax.numpy as jnp
+
+    prompts = jnp.asarray(
+        np.stack([[5, 6, 7, 8, 5, 6], [9, 10, 11, 9, 10, 11]]), jnp.int32
+    )
+    cache = M.init_cache(CFG, 2, 64)
+    _, cache = M.prefill(CFG, PARAMS, {"tokens": prompts}, cache)
+    tok = jnp.asarray([3, 7], jnp.int32)
+
+    logits1, c1 = M.decode_commit_token(CFG, PARAMS, cache, tok)
+    logits2, staged = M.decode_step(CFG, PARAMS, cache, tok[:, None])
+    c2 = M.commit_cache(CFG, cache, staged, jnp.zeros((2, 1), jnp.int32),
+                        jnp.ones((2,), jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2[:, 0]))
+    leaves1, leaves2 = jax.tree.leaves(c1), jax.tree.leaves(c2)
+    assert len(leaves1) == len(leaves2)
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert np.all(np.asarray(c1["pos"]) == np.asarray(cache["pos"]) + 1)
+
+
+def test_adaptive_chain_length_monotone():
+    """best_chain_length is monotone: longer chains for higher acceptance,
+    shorter for costlier drafts, zero below the speedup threshold."""
+    ks_alpha = [best_chain_length(a, 0.3, 8, t_min=1.0)
+                for a in (0.05, 0.3, 0.6, 0.9, 0.99)]
+    assert ks_alpha == sorted(ks_alpha)
+    assert ks_alpha[-1] > ks_alpha[0]
+
+    ks_cost = [best_chain_length(0.8, c, 8, t_min=1.0)
+               for c in (0.02, 0.1, 0.3, 0.6, 0.95)]
+    assert ks_cost == sorted(ks_cost, reverse=True)
+
+    # hopeless economics -> stop drafting entirely
+    assert best_chain_length(0.1, 0.9, 8, t_min=1.1) == 0
+    # near-free, near-certain drafts -> draft the full budget
+    assert best_chain_length(0.99, 0.01, 8, t_min=1.1) == 8
+
+
+def test_server_slot_limits_track_acceptance():
+    """A slot with collapsed acceptance stops drafting; a healthy slot keeps
+    its full budget. Admission resets the slot estimator."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=128, draft_k=4,
+                            draft_spec=SPEC, fused=True, adaptive=True,
+                            min_obs=4, t_min=1.05)
+    # healthy draft economics: drafts cost ~10% of a verify round
+    srv.costs.observe_target(1.0, tokens=1)
+    srv.costs.observe("chain_draft", 0.1, tokens=1)
+    for _ in range(12):
+        srv.acceptance.observe(srv._slot_key(0), True)
+        srv.acceptance.observe(srv._slot_key(1), False)
+    assert srv._slot_limit(0) == srv.k
+    assert srv._slot_limit(1) == 0
+    # continuous batching: a new request on the dead slot starts fresh
+    srv.add_request(1, np.array([7, 8, 9, 7, 8, 9], np.int32))
+    assert srv.acceptance.counts(srv._slot_key(1)) == 0
+    assert srv._slot_limit(1) == srv.k   # below min_obs -> full budget

@@ -1,5 +1,7 @@
 """Draft token tree: ancestor-closure masks, P_acc bookkeeping, flatten."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="needs hypothesis — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tree import DraftTree, bucket_for, chain_tree
