@@ -33,14 +33,18 @@ def bench_config():
     )
 
 
-def trained_params(cfg=None, steps: int = 60):
-    """Train briefly on the synthetic corpus (cached on disk)."""
+def trained_params(cfg=None, steps: int = 60, cache_dir: str = None):
+    """Train briefly on the synthetic corpus (cached on disk).
+
+    ``cache_dir`` keeps differently-trained variants apart (e.g. the CI
+    ``--smoke`` model must never poison the full benchmark cache)."""
     cfg = cfg or bench_config()
+    cache_dir = cache_dir or CACHE_DIR
     key = jax.random.PRNGKey(0)
     params = M.init_params(cfg, key)
-    if os.path.isdir(CACHE_DIR):
+    if os.path.isdir(cache_dir):
         try:
-            (params,) = load_checkpoint(CACHE_DIR, params)[:1]
+            (params,) = load_checkpoint(cache_dir, params)[:1]
             return cfg, params
         except Exception:
             pass
@@ -52,8 +56,8 @@ def trained_params(cfg=None, steps: int = 60):
     for _ in range(steps):
         b = {k: jnp.asarray(v) for k, v in next(it).items()}
         params, opt, _ = step(params, opt, b)
-    os.makedirs(os.path.dirname(CACHE_DIR) or ".", exist_ok=True)
-    save_checkpoint(CACHE_DIR, params, step=steps)
+    os.makedirs(os.path.dirname(cache_dir) or ".", exist_ok=True)
+    save_checkpoint(cache_dir, params, step=steps)
     return cfg, params
 
 

@@ -20,6 +20,11 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated subset")
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve suite only: tiny model, few rounds — the CI "
+                         "drafting-path canary (own model cache, exits "
+                         "nonzero on a clear tree-vs-chain regression); "
+                         "other suites ignore this flag")
     args = ap.parse_args()
 
     import ablation_dytc
@@ -35,7 +40,7 @@ def main() -> None:
         "table1": lambda: table1_speedup.main(args.tokens),
         "table2": lambda: table2_accepted.main(args.tokens),
         "fig3": lambda: fig3_methods.main(args.tokens),
-        "serve": lambda: serve_batched.main(args.tokens),
+        "serve": lambda: serve_batched.main(args.tokens, smoke=args.smoke),
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     os.makedirs(args.out, exist_ok=True)

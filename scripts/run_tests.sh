@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 test runner: install dev deps (best-effort) and run the suite.
+# Tier-1 test runner — THE entrypoint CI runs (.github/workflows/ci.yml calls
+# this script, so local and CI runs cannot drift: same env, same flags).
 # Usage: scripts/run_tests.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# CPU JAX everywhere: CI runners have no accelerator, and local runs must
+# reproduce CI. Override by exporting JAX_PLATFORMS before invoking.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 # Best-effort: offline containers skip the install and run the suite anyway
 # (hypothesis-based modules are then skipped with a reason, not errored).

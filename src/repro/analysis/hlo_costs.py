@@ -14,7 +14,6 @@ multiplies through ``known_trip_count`` annotations on while ops, and sums:
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict, List, Tuple
 

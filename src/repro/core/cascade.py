@@ -14,7 +14,7 @@ is lossless by construction and differs only in scheduling.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List
 
 import numpy as np
 

@@ -16,7 +16,7 @@ parameter), Mixing-DSIA (orthogonal strategies combined), Replacing-DSIA
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

@@ -17,14 +17,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import verify as verify_lib
 from repro.core.dsia import DraftSpec, PLD_SPEC
 from repro.core.engine import SpecEngine
-from repro.core.ewif import dytc_step_objective
+from repro.core.ewif import best_dytc_k
 from repro.core.tree import DraftTree
 
 
@@ -85,10 +85,9 @@ class DyTCScheduler:
             c = max(costs.c_hat(cand.name, 0.5), 1e-3)
             if cand.spec is None:
                 c = c_dn
-            for k in range(1, self.cfg.k_max + 1):
-                val = dytc_step_objective(a, c, k, a_dn, c_dn)
-                if val > best[2]:
-                    best = (cand, k, val)
+            val, k = best_dytc_k(a, c, a_dn, c_dn, self.cfg.k_max)
+            if val > best[2]:
+                best = (cand, k, val)
         if best[2] <= 0:
             return None, 0, best[2]
         return best
@@ -237,11 +236,7 @@ class DyTCScheduler:
     def step(self) -> List[int]:
         """One DyTC round: build tree, verify, commit, update estimators."""
         tree, expansions = self.build_tree()
-        accepted_nodes_before = set()
         accepted = self.engine.verify_and_commit(tree)
-        # reconstruct accepted node set for the acceptance updates
-        # (verify_and_commit already advanced state; recompute the path)
-        path = set()
         # first-token outcomes (Eq. 4): an expansion is observed iff its
         # parent was accepted; outcome = its first node accepted.
         acc_set = self._last_path(tree, accepted)

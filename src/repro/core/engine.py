@@ -100,6 +100,145 @@ def chain_draft_scan(
     return toks[:, 1:], have
 
 
+def tree_draft_scan(
+    cfg: ModelConfig,
+    expansions: int,                  # static scan trip count (max per-slot budget)
+    top_k: int,                       # static sibling candidates per expansion
+    params: dict,
+    cache: dict,                      # batched committed cache (read-only here)
+    tokens: jax.Array,                # (B, N) int32 seeded node tokens (node 0 = pending)
+    parents: jax.Array,               # (B, N) int32, -1 at root/unused
+    depth: jax.Array,                 # (B, N) int32
+    p_acc: jax.Array,                 # (B, N) f32 accumulated acceptance per node
+    mask: jax.Array,                  # (B, N, N) bool ancestor-closure (self-only unused)
+    count: jax.Array,                 # (B,) int32 nodes used (root + PLD seed)
+    limit: jax.Array,                 # (B,) int32 per-slot expansion budget (Eq. 5)
+    alpha: jax.Array,                 # (B,) f32 per-slot neural acceptance estimate
+    c: jax.Array,                     # () f32 draft cost coefficient (stop rule)
+    t_min: jax.Array,                 # () f32 min-speedup threshold (stop rule)
+    gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
+    *,
+    top_p: float = 0.3,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused DyTC tree growth: one ``lax.scan`` over expansion steps (§4.2).
+
+    The batched, on-device analogue of ``DyTCScheduler.build_tree``. Each
+    scan step re-decodes the padded (B, N) node block under the dense
+    ancestor-closure mask (per-slot (N, N) — the same mechanism verification
+    uses; the committed cache stays READ-ONLY), then per slot:
+
+      1. picks the active node with the highest accumulated P_acc with a
+         ``jnp.argmax`` over the node axis (Alg. 1 line 5 — no host loop),
+      2. applies the stop rule P_acc * (alpha/c) < t_min (Alg. 1; the root
+         is exempt, mirroring the host scheduler), deactivating the node,
+      3. expands: the draft's ``top_k`` next-token candidates become
+         children (TOP-P filtered against the top candidate, Alg. 1
+         line 19), with token-level P_acc refinement
+         ``alpha * sqrt(p_i / p_top)`` as in the host DyTC path. A
+         candidate that duplicates an existing child of the leaf (e.g. the
+         PLD-seeded chain node the drafter agrees with) is NOT re-added —
+         and when the duplicate is the drafter's top-1, ``first_neural``
+         aliases the existing node, so the Eq. 4 estimator observes the
+         prediction's true accept/reject outcome instead of a spurious
+         rejection (the greedy walk always takes the first matching child).
+
+    Slots past their per-slot ``limit`` (the Eq. 5 budget chosen by the
+    server from its acceptance/cost trackers) and slots whose tree bucket
+    is full stop growing; their carries pass through unchanged, keeping
+    every shape jit-stable at the ``TREE_BUCKETS`` padding. Like
+    ``chain_draft_scan``, each step re-decodes the whole padded block
+    (O(E*N) node-forwards per round) instead of carrying staged KV in the
+    scan — dispatch-free and cache-copy-free, and the MXU absorbs the
+    padded block on TPU; an O(E*top_k) staged-KV carry is a possible
+    future optimization for large buckets. Unused node
+    slots hold stale tokens — their self-only mask rows keep them invisible
+    to every real node, exactly as host-side ``DraftTree.flatten`` pads.
+
+    Returns (tokens, parents, depth, p_acc, mask, count, first_neural)
+    where ``first_neural[b]`` is the node index carrying the slot's first
+    neural top-1 prediction (-1 if none) — the Eq. 4 observation point.
+    """
+    B, N = tokens.shape
+    b_idx = jnp.arange(B)
+    slot_j = jnp.arange(N)
+    active = slot_j[None, :] < count[:, None]          # every seeded node
+    first_neural = jnp.full((B,), -1, jnp.int32)
+    alpha = alpha.astype(jnp.float32)
+    rate = alpha / jnp.maximum(c.astype(jnp.float32), 1e-6)
+
+    def body(carry, e):
+        tokens, parents, depth, p_acc, mask, count, active, first_neural = carry
+        qpos = cache["pos"][:, None] + depth
+        logits, _ = M.decode_step(
+            cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos
+        )
+        # Alg. 1 line 5: best active node by accumulated P_acc
+        score = jnp.where(active, p_acc, -jnp.inf)
+        leaf = jnp.argmax(score, axis=1).astype(jnp.int32)           # (B,)
+        valid = jnp.any(active, axis=1) & (e < limit)
+        leaf_p = jnp.take_along_axis(p_acc, leaf[:, None], 1)[:, 0]
+        # stop rule: least-future-speedup below threshold (root exempt)
+        grow = valid & ((leaf == 0) | (leaf_p * rate >= t_min))
+        # the selected node is consumed either way (expanded or stopped)
+        active = active.at[b_idx, jnp.where(valid, leaf, N)].set(
+            False, mode="drop"
+        )
+        lg = jnp.take_along_axis(logits, leaf[:, None, None], axis=1)[:, 0]
+        probs = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)      # (B, V)
+        top_vals, top_idx = jax.lax.top_k(probs, top_k)
+        parent_row = jnp.take_along_axis(mask, leaf[:, None, None], axis=1)[:, 0]
+        parent_depth = jnp.take_along_axis(depth, leaf[:, None], 1)[:, 0]
+        for r in range(top_k):   # kept candidates land contiguously at count
+            tok_r = top_idx[:, r].astype(jnp.int32)
+            # dedup: an existing same-token child of this leaf (PLD seed or
+            # earlier expansion) already covers this candidate in the walk
+            real_now = slot_j[None, :] < count[:, None]
+            dup_cand = (parents == leaf[:, None]) & (tokens == tok_r[:, None]) & real_now
+            dup = dup_cand.any(axis=1)
+            dup_idx = jnp.argmax(dup_cand, axis=1).astype(jnp.int32)
+            keep = grow & ~dup & (count < N)
+            if r > 0:   # TOP-P sibling filter (Alg. 1 line 19)
+                keep &= top_vals[:, r] >= top_p * top_vals[:, 0]
+            idx = jnp.where(keep, count, N)            # N = dropped write
+            a_node = jnp.minimum(
+                1.0,
+                alpha
+                * jnp.sqrt(top_vals[:, r] / jnp.maximum(top_vals[:, 0], 1e-9)),
+            )
+            # a duplicated child was seeded with the PLD prior — the neural
+            # drafter just confirmed it, so refresh its P_acc to the neural
+            # score (else best-leaf selection undervalues the agreed chain)
+            ridx = jnp.where(grow & dup, dup_idx, N)
+            old_p = jnp.take_along_axis(
+                p_acc, jnp.minimum(ridx, N - 1)[:, None], 1
+            )[:, 0]
+            p_acc = p_acc.at[b_idx, ridx].set(
+                jnp.maximum(old_p, leaf_p * a_node), mode="drop"
+            )
+            tokens = tokens.at[b_idx, idx].set(tok_r, mode="drop")
+            parents = parents.at[b_idx, idx].set(leaf, mode="drop")
+            depth = depth.at[b_idx, idx].set(parent_depth + 1, mode="drop")
+            p_acc = p_acc.at[b_idx, idx].set(leaf_p * a_node, mode="drop")
+            row = parent_row | (slot_j[None, :] == idx[:, None])
+            mask = mask.at[b_idx, idx].set(row, mode="drop")
+            active = active.at[b_idx, idx].set(True, mode="drop")
+            if r == 0:
+                # the node carrying the drafter's top-1 outcome: the new
+                # child, or the existing duplicate it agrees with
+                outcome = jnp.where(grow & dup, dup_idx, jnp.where(keep, idx, N))
+                first_neural = jnp.where(
+                    (first_neural < 0) & (outcome < N), outcome, first_neural
+                )
+            count = count + keep.astype(jnp.int32)
+        return (tokens, parents, depth, p_acc, mask, count, active, first_neural), None
+
+    carry = (tokens, parents, depth, p_acc.astype(jnp.float32), mask, count,
+             active, first_neural)
+    carry, _ = jax.lax.scan(body, carry, jnp.arange(expansions, dtype=jnp.int32))
+    tokens, parents, depth, p_acc, mask, count, _, first_neural = carry
+    return tokens, parents, depth, p_acc, mask, count, first_neural
+
+
 class SpecEngine:
     """Single-sequence (B=1) speculative engine; the batched path lives in
     repro.serving.server."""

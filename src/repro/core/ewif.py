@@ -189,6 +189,22 @@ def dytc_step_objective(
     return (e_acc + (alpha ** k) * alpha_dn) / (c * k + c_dn)
 
 
+def best_dytc_k(
+    alpha: float, c: float, alpha_dn: float, c_dn: float, k_max: int
+) -> Tuple[float, int]:
+    """argmax_k of the Eq. 5 objective for one configuration.
+
+    Shared by the host DyTC scheduler (per candidate configuration) and the
+    batched server's per-slot tree budgets. Returns (best value, best k).
+    """
+    best_v, best_k = -math.inf, 0
+    for k in range(1, max(k_max, 0) + 1):
+        v = dytc_step_objective(alpha, c, k, alpha_dn, c_dn)
+        if v > best_v:
+            best_v, best_k = v, k
+    return best_v, best_k
+
+
 def greedy_step_objective(alpha: float, c: float, k: int) -> float:
     """Greedy local speedup (the §4.2 strawman): a(1-a^k)/((1-a) c k)."""
     if c * k <= 1e-12:

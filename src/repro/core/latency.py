@@ -115,3 +115,24 @@ def best_chain_length(
         if v > best_v:
             best_k, best_v = k, v
     return best_k if best_v >= t_min else 0
+
+
+def best_tree_expansions(
+    alpha: float, c: float, e_max: int, t_min: float = 1.0
+) -> int:
+    """Per-slot tree expansion budget for the batched ``tree_fused`` mode.
+
+    Picks the budget maximizing the Eq. 5 admissible objective with the
+    drafter as its own continuation (the homogeneous-hierarchy
+    specialization — the batched server runs ONE neural drafter, so the
+    "least future speedup" term prices more of the same drafter), then
+    gates on the chain EWIF the same way ``best_chain_length`` does: a slot
+    whose best expected speedup falls below ``t_min`` stops tree drafting
+    entirely and degrades to PLD + AR inside the same batched verify.
+    """
+    from repro.core.ewif import best_dytc_k, t_sd
+
+    _, best_k = best_dytc_k(alpha, c, alpha, c, e_max)
+    if best_k <= 0:
+        return 0
+    return best_k if t_sd(alpha, c, best_k) >= t_min else 0

@@ -12,8 +12,7 @@ the visibility mask is a dense (T, T) ancestor-closure matrix — MXU-friendly
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -119,3 +118,45 @@ def chain_tree(root_token: int, chain: Sequence[int], config: str, alpha: float)
     for tok in chain:
         node = t.add_child(node, tok, config, alpha)
     return t
+
+
+def tree_seed_arrays(
+    pending: np.ndarray,          # (B,) int
+    chains: np.ndarray,           # (B, K) int — PLD-prefilled chain per slot
+    have: np.ndarray,             # (B,) int — chain tokens actually proposed
+    bucket: int,
+    pld_alpha: float = 0.3,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched device-tree seed: per-slot chain trees padded to ``bucket``.
+
+    Node 0 is the pending bonus token; nodes 1..have[b] are the slot's PLD
+    chain (parent = previous node). This is the array form the fused
+    ``tree_draft_scan`` expands on device — same node layout and mask
+    convention as ``DraftTree.flatten``: unused slots see only themselves
+    and no real node sees them.
+
+    Returns (tokens (B,N) i32, parents (B,N) i32 with -1 at roots/unused,
+    depth (B,N) i32, p_acc (B,N) f32, mask (B,N,N) bool, count (B,) i32).
+    """
+    pending = np.asarray(pending)
+    chains = np.asarray(chains)
+    have = np.asarray(have)
+    B, K = chains.shape
+    N = bucket
+    if N < K + 1:
+        raise ValueError(f"bucket {N} cannot hold a {K}-token chain + root")
+    j = np.arange(N)
+    seeded = (j[None, :] >= 1) & (j[None, :] <= have[:, None])   # (B, N)
+    tokens = np.zeros((B, N), np.int32)
+    tokens[:, 0] = pending
+    tokens[:, 1 : K + 1] = np.where(seeded[:, 1 : K + 1], chains, 0)
+    parents = np.where(seeded, j[None, :] - 1, -1).astype(np.int32)
+    depth = np.where(seeded, j[None, :], 0).astype(np.int32)
+    p_acc = np.where(seeded, pld_alpha ** depth.astype(np.float64), 0.0)
+    p_acc[:, 0] = 1.0
+    p_acc = p_acc.astype(np.float32)
+    # chain ancestor closure: node i sees j <= i; unused slots are self-only
+    mask = np.broadcast_to(np.eye(N, dtype=bool), (B, N, N)).copy()
+    mask |= (j[None, None, :] < j[None, :, None]) & seeded[:, :, None]
+    count = (have + 1).astype(np.int32)
+    return tokens, parents, depth, p_acc, mask, count

@@ -39,6 +39,49 @@ def greedy_accept_tree(
         node = nxt
 
 
+def greedy_accept_tree_batched(
+    tokens: "jax.Array",            # (B, N) int32 node tokens (node 0 = root)
+    parents: "jax.Array",           # (B, N) int32, -1 at root/unused
+    count: "jax.Array",             # (B,) int32 real nodes per slot
+    next_argmax: "jax.Array",       # (B, N) int32 target argmax after each node
+) -> Tuple["jax.Array", "jax.Array", "jax.Array"]:
+    """Vectorized ``greedy_accept_tree`` over a batch of padded device trees.
+
+    Walks every slot's tree following the target's argmax at each node —
+    the accepted path is exactly the target model's own greedy continuation,
+    so committing it is lossless. One ``fori_loop`` of N-1 masked steps (max
+    path length), no host sync.
+
+    Returns (path_idx (B, N) int32 — accepted node indices in path order,
+    zero-padded; n_acc (B,) int32 — accepted nodes incl. the root; bonus
+    (B,) int32 — the target's next token after the last accepted node).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    B, N = tokens.shape
+    b_idx = jnp.arange(B)
+    real = jnp.arange(N)[None, :] < count[:, None]
+
+    def step(_, carry):
+        node, n_acc, done, path = carry
+        want = jnp.take_along_axis(next_argmax, node[:, None], 1)[:, 0]
+        cand = real & (parents == node[:, None]) & (tokens == want[:, None])
+        found = cand.any(axis=1) & ~done
+        child = jnp.argmax(cand, axis=1).astype(jnp.int32)  # first matching child
+        path = path.at[b_idx, jnp.where(found, n_acc, N)].set(child, mode="drop")
+        node = jnp.where(found, child, node)
+        n_acc = n_acc + found.astype(jnp.int32)
+        return node, n_acc, done | ~found, path
+
+    node0 = jnp.zeros((B,), jnp.int32)
+    carry = (node0, jnp.ones((B,), jnp.int32), jnp.zeros((B,), bool),
+             jnp.zeros((B, N), jnp.int32))
+    node, n_acc, _, path = jax.lax.fori_loop(0, N - 1, step, carry)
+    bonus = jnp.take_along_axis(next_argmax, node[:, None], 1)[:, 0]
+    return path, n_acc, bonus
+
+
 def spec_sample_chain(
     draft_tokens: np.ndarray,       # (k,)
     draft_probs: np.ndarray,        # (k, V) draft distribution per position

@@ -1,7 +1,7 @@
 """Byte-level tokenizer (no external vocab files — offline-safe)."""
 from __future__ import annotations
 
-from typing import Iterable, List
+from typing import Iterable
 
 import numpy as np
 

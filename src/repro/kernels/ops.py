@@ -8,7 +8,6 @@ ref.ref_verify_attention (and to models.attention.decode_attention).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Pure-jnp oracles for every kernel (the correctness contract)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,11 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.config import get_config
 from repro.core.cascade import (
     ARScheduler, HCScheduler, PLDScheduler, SDScheduler, TreeScheduler,
-    TreeVCScheduler, VCHCScheduler, VCScheduler,
+    VCHCScheduler, VCScheduler,
 )
 from repro.core.dsia import build_hierarchy, layer_sparsity
 from repro.core.dytc import DyTCScheduler

@@ -16,7 +16,7 @@ MaxText-style logical rules, resolved per architecture:
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np

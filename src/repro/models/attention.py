@@ -26,7 +26,6 @@ Mask kinds:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -179,6 +178,40 @@ def blockwise_attention(
     return out.astype(q.dtype)
 
 
+def _staged_pallas_partials(
+    q: jax.Array,              # (B, T, H, hd) — ALREADY scaled
+    k_new: jax.Array,          # (B, T, KV, hd)
+    v_new: jax.Array,
+    vis: jax.Array,            # (B, T, T) bool — tree & positional validity
+    rep: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Intra-tree softmax partials via the Pallas tree-attention kernel.
+
+    Same row layout as ``kernels.ops.verify_attention`` (row = r*T + t per
+    (batch, kv-head) grid step, head_dim padded to the 128-lane tile);
+    interpret mode off-TPU. Returns (acc (B,T,H,hd), m (B,H,T), l (B,H,T)).
+    """
+    from repro.kernels.tree_attention import tree_attention_partial
+
+    B, T, H, hd = q.shape
+    KV = k_new.shape[2]
+    qr = q.reshape(B, T, KV, rep, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B, KV, rep * T, hd
+    )
+    kn = k_new.transpose(0, 2, 1, 3)
+    vn = v_new.transpose(0, 2, 1, 3)
+    pad = (-hd) % 128
+    if pad:
+        widths = ((0, 0), (0, 0), (0, 0), (0, pad))
+        qr, kn, vn = (jnp.pad(a, widths) for a in (qr, kn, vn))
+    acc, m, l = tree_attention_partial(
+        qr, kn, vn, vis,
+        interpret=jax.default_backend() != "tpu", scale=1.0,
+    )
+    acc = acc[..., :hd].reshape(B, KV, rep, T, hd).transpose(0, 3, 1, 2, 4)
+    return acc.reshape(B, T, H, hd), m.reshape(B, H, T), l.reshape(B, H, T)
+
+
 def decode_attention(
     q: jax.Array,              # (B, T, H, hd) — T = 1 (AR) or draft bucket
     k_cache: jax.Array,        # (B, S_c, KV, hd)
@@ -188,19 +221,24 @@ def decode_attention(
     v_new: jax.Array,          # (B, T, KV, hd)
     q_pos: jax.Array,          # (B, T) absolute positions of the draft tokens
     *,
-    tree_mask: Optional[jax.Array] = None,   # (T, T) bool ancestor-or-self mask
+    tree_mask: Optional[jax.Array] = None,   # (T, T) or (B, T, T) bool mask
     kind: str = "causal",
     window: int = 0,
     sink: int = 0,
     ring: bool = False,        # cache is a ring buffer of size S_c (= window)
     chunk_kv: int = 4096,
     seq_axes: Optional[Tuple[str, ...]] = None,  # context-parallel partials
+    backend: Optional[str] = None,   # "pallas": kernel staged pass (tree verify)
 ) -> jax.Array:
     """Attention of T staged tokens over [committed cache ++ staged draft].
 
     Returns (B, T, H, hd). The cache is read-only here — commit happens after
     verification (see models.model.commit_cache). Tree mask gives intra-draft
     visibility (ancestor-closure of the draft token tree); None means chain.
+    A 2-D (T, T) mask is shared across the batch; a 3-D (B, T, T) mask gives
+    every sequence its own tree (the batched ``tree_fused`` serving mode).
+    ``backend="pallas"`` routes the dense intra-tree pass through
+    ``kernels.tree_attention`` and merges its partials with the cache scan.
 
     ``seq_axes`` switches the cache pass from the sequential chunk-scan to
     flash-decoding split-KV: the seq dim reshapes to (n, S/n) with n = the
@@ -332,21 +370,32 @@ def decode_attention(
         )
 
     # --- dense pass over the staged draft tokens
-    s_d = _scores(q, _expand_kv(k_new, rep))         # (B,H,T,T)
     vis = _mask(q_pos, q_pos, kind, window, sink)    # (B, T, T) positional validity
     if tree_mask is not None:
-        vis = vis & tree_mask[None]
-    s_d = jnp.where(vis[:, None], s_d, NEG_INF)
+        vis = vis & (tree_mask if tree_mask.ndim == 3 else tree_mask[None])
 
-    # --- merge softmax accumulators
-    m_d = jnp.max(s_d, axis=-1)
-    m_tot = jnp.maximum(m_c, m_d)
-    p_d = jnp.exp(s_d - m_tot[..., None])
-    corr_c = jnp.exp(m_c - m_tot)
-    l_tot = l_c * corr_c + jnp.sum(p_d, axis=-1)
-    acc = acc_c * corr_c.transpose(0, 2, 1)[..., None] + _out(
-        p_d.astype(q.dtype), _expand_kv(v_new, rep)
-    )
+    if backend == "pallas":
+        acc_d, m_d, l_d = _staged_pallas_partials(q, k_new, v_new, vis, rep)
+        m_tot = jnp.maximum(m_c, m_d)
+        corr_c = jnp.exp(m_c - m_tot)
+        corr_d = jnp.exp(m_d - m_tot)
+        l_tot = l_c * corr_c + l_d * corr_d
+        acc = (
+            acc_c * corr_c.transpose(0, 2, 1)[..., None]
+            + acc_d * corr_d.transpose(0, 2, 1)[..., None]
+        )
+    else:
+        s_d = _scores(q, _expand_kv(k_new, rep))     # (B,H,T,T)
+        s_d = jnp.where(vis[:, None], s_d, NEG_INF)
+        # --- merge softmax accumulators
+        m_d = jnp.max(s_d, axis=-1)
+        m_tot = jnp.maximum(m_c, m_d)
+        p_d = jnp.exp(s_d - m_tot[..., None])
+        corr_c = jnp.exp(m_c - m_tot)
+        l_tot = l_c * corr_c + jnp.sum(p_d, axis=-1)
+        acc = acc_c * corr_c.transpose(0, 2, 1)[..., None] + _out(
+            p_d.astype(q.dtype), _expand_kv(v_new, rep)
+        )
     l_tot = jnp.maximum(l_tot, 1e-30)
     out = acc / l_tot.transpose(0, 2, 1)[..., None]
     return out.astype(q.dtype)

@@ -1,7 +1,6 @@
 """Primitive layers: norms, RoPE, MLPs, embeddings. Pure functions over pytrees."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

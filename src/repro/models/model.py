@@ -28,7 +28,6 @@ it is ring-buffer safe for sliding-window layers.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -210,6 +209,7 @@ def _attn_layer(
     gate: jax.Array,
     attn_override: Optional[dict] = None,   # {"kind","window","sink"} DSIA
     seq_axes: Optional[tuple] = None,       # context-parallel decode partials
+    attn_backend: Optional[str] = None,     # "pallas": kernel tree-verify pass
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Returns (residual delta, staged/new cache entries)."""
     B, T, _ = h.shape
@@ -279,6 +279,7 @@ def _attn_layer(
             ring=bool(ring),
             chunk_kv=4096,
             seq_axes=None if ring else seq_axes,    # ring caches are small
+            backend=attn_backend,
         )
         staged = {"k": k, "v": v}
     out = jnp.einsum("bthk,hkd->btd", o, wo)
@@ -346,6 +347,7 @@ def _run_stack(
     remat: bool = False,
     attn_override: Optional[dict] = None,
     seq_axes: Optional[tuple] = None,
+    attn_backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (hidden, staged_or_new_cache_segments, moe_aux_sum)."""
     segs = layout(cfg)
@@ -380,7 +382,7 @@ def _run_stack(
                 if spec.block is BlockKind.ATTENTION:
                     delta, staged = _attn_layer(
                         cfg, p_l, spec, hh, q_pos, mode, lc, tree_mask, gate,
-                        attn_override, seq_axes,
+                        attn_override, seq_axes, attn_backend,
                     )
                 else:
                     delta, staged = _mamba_layer(cfg, p_l, hh, mode, lc, gate)
@@ -535,14 +537,17 @@ def decode_step(
     tokens: jax.Array,                # (B, T) or (B, T, nc)
     *,
     gates: Optional[jax.Array] = None,
-    tree_mask: Optional[jax.Array] = None,   # (T, T) ancestor-or-self
-    q_pos: Optional[jax.Array] = None,       # (T,) absolute positions
+    tree_mask: Optional[jax.Array] = None,   # (T, T) or (B, T, T) ancestor-or-self
+    q_pos: Optional[jax.Array] = None,       # (T,) or (B, T) absolute positions
     attn_override: Optional[dict] = None,    # efficient-attention DSIA
     seq_axes: Optional[tuple] = None,        # context-parallel cache partials
+    attn_backend: Optional[str] = None,      # "pallas": kernel tree-verify pass
 ) -> Tuple[jax.Array, Any]:
     """Stage-only decode of T tokens against a frozen cache.
 
     Returns (logits (B,T,[nc,]V), staged) — commit with ``commit_cache``.
+    A 3-D tree mask carries one ancestor-closure per sequence (batched tree
+    verification); paired with a (B, T) ``q_pos`` of per-node depths.
     """
     h = _embed(cfg, params, {"tokens": tokens})
     B, T = tokens.shape[0], tokens.shape[1]
@@ -553,7 +558,7 @@ def decode_step(
     h, staged, _ = _run_stack(
         cfg, params, h, mode="decode", cache=cache, gates=gates,
         q_pos=q_pos, tree_mask=tree_mask, attn_override=attn_override,
-        seq_axes=seq_axes,
+        seq_axes=seq_axes, attn_backend=attn_backend,
     )
     return _head(cfg, params, h), staged
 

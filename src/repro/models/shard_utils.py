@@ -1,7 +1,7 @@
 """Mesh-aware sharding constraints that degrade to no-ops off-mesh."""
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Tuple, Union
 
 import jax
 from jax.sharding import PartitionSpec as P

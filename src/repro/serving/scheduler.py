@@ -2,7 +2,9 @@
 batch slots with continuous batching (a finished slot is refilled on the
 next step boundary). ``ServeLoop`` is the admit/step/retire glue between a
 ``RequestScheduler`` and a ``BatchedSpecServer`` — examples, benchmarks and
-tests all drive serving through it."""
+tests all drive serving through it. Scheduling is orthogonal to the
+server's proposal mode (``chain_fused`` / ``legacy`` / ``tree_fused``):
+every mode exposes the same add_request/step/release slot contract."""
 from __future__ import annotations
 
 import dataclasses
@@ -72,12 +74,14 @@ class ServeLoop:
         self.server = server
         self.scheduler = scheduler
         self._slot_req: Dict[int, Request] = {}
+        self._req_slot: Dict[int, int] = {}   # request_id -> slot
 
     def step_once(self) -> Dict[int, List[int]]:
         for slot in self.scheduler.admit():
             req = self.scheduler.active[slot]
             self.server.add_request(slot, req.prompt)
             self._slot_req[slot] = req
+            self._req_slot[req.request_id] = slot
         out = self.server.step()
         for slot, toks in out.items():
             req = self._slot_req.get(slot)
@@ -85,7 +89,7 @@ class ServeLoop:
                 req.generated.extend(toks)
         for req in self.scheduler.retire():
             req.generated = req.generated[: req.max_new_tokens]
-            slot = next(s for s, r in self._slot_req.items() if r is req)
+            slot = self._req_slot.pop(req.request_id)
             del self._slot_req[slot]
             self.server.release(slot)
         return out

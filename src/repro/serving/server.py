@@ -1,11 +1,20 @@
-"""Batched speculative serving (continuous batching + chain cascades).
+"""Batched speculative serving (continuous batching + cascades).
 
-The paper notes DyTC's tree adaptivity pays off at small batch; at larger
-batch sizes CAS-Spec degrades gracefully to *chain* cascades (App. A). This
-server implements that production path: per-slot PLD proposals merged with a
-batched layer-sparse neural draft, verified jointly in one target forward,
-committed per-sequence (divergent accepted lengths are supported by the
-(B,)-pos cache).
+Three proposal modes (see docs/serving.md):
+
+  - ``chain_fused``  — per-slot PLD proposals merged with a batched
+    layer-sparse neural *chain* draft, one ``lax.scan`` dispatch per round
+    (App. A's large-batch degradation path; the production default).
+  - ``legacy``       — the seed's per-step chain drafting loop (one jitted
+    dispatch + host sync per draft token); kept only as the A/B baseline.
+  - ``tree_fused``   — the paper's headline Dynamic Tree Cascade (§4.2)
+    run batched and on-device: every slot grows a bucketed token tree in a
+    single fused ``tree_draft_scan`` dispatch, and tree verification +
+    longest-accepted-path commit is one fused target call whose intra-tree
+    attention can route through ``kernels.tree_attention``.
+
+All three verify jointly in one target forward and commit per-sequence
+(divergent accepted lengths are supported by the (B,)-pos cache).
 
 Fused drafting
 --------------
@@ -20,6 +29,24 @@ Verification + acceptance + commit are likewise one jitted call
 replaced by a vectorized cumprod over the chain-match mask. Drafts never
 write the real cache — only target verification does — so serving stays
 lossless.
+
+Fused tree drafting (DyTC §4.2, batched)
+----------------------------------------
+``tree_fused`` seeds every slot's tree with its PLD chain
+(``core.tree.tree_seed_arrays``), then grows it on device with
+``core.engine.tree_draft_scan``: one jitted ``lax.scan`` over expansion
+steps, each re-decoding the padded (B, N) node block under per-slot dense
+ancestor-closure masks, selecting the best P_acc leaf with ``jnp.argmax``
+and appending TOP-P-filtered top-K children — Alg. 1 without host loops.
+Per-slot expansion budgets come from the Eq. 5 objective
+(``latency.best_tree_expansions`` over the slot's ``AcceptanceTracker``
+alpha and the measured ``CostTracker`` cost), and trees are padded to a
+fixed ``TREE_BUCKETS`` size so every round reuses one executable. The
+verify half (``_tree_verify_accept_commit``) decodes the whole padded tree
+once, walks the longest target-greedy path per slot with a vectorized tree
+walk (``verify.greedy_accept_tree_batched``) and commits it — one drafting
+dispatch + one verify dispatch per round, and greedy outputs stay
+token-identical to AR decoding (drafts only change speed, never content).
 
 Adaptive chain-cascade drafting (DyTC Eq. 5 analogue)
 -----------------------------------------------------
@@ -47,13 +74,48 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import ModelConfig
+from repro.config.base import BlockKind, ModelConfig
 from repro.core.acceptance import AcceptanceTracker
-from repro.core.dsia import DraftSpec
-from repro.core.engine import chain_draft_scan
-from repro.core.latency import CostTracker, best_chain_length
+from repro.core.dsia import DraftSpec, PLD_SPEC
+from repro.core.engine import chain_draft_scan, tree_draft_scan
+from repro.core.latency import CostTracker, best_chain_length, best_tree_expansions
 from repro.core.pld import PromptLookup
+from repro.core.tree import bucket_for, tree_seed_arrays
+from repro.core.verify import greedy_accept_tree_batched
 from repro.models import model as M
+
+PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused")
+
+
+def _tree_verify_accept_commit(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                # (B, N) int32 padded tree node tokens
+    parents: jax.Array,               # (B, N) int32, -1 at root/unused
+    depth: jax.Array,                 # (B, N) int32
+    mask: jax.Array,                  # (B, N, N) bool ancestor closure
+    count: jax.Array,                 # (B,) int32 real nodes per slot
+    live: jax.Array,                  # (B,) bool
+    *,
+    attn_backend: Optional[str] = None,
+):
+    """One fused target round for tree proposals: decode the whole padded
+    node block jointly under per-slot ancestor-closure masks (the intra-tree
+    attention half routes through ``kernels.tree_attention`` when
+    ``attn_backend="pallas"``), walk the longest target-greedy path per slot
+    with a vectorized tree walk, and commit the accepted path's staged KV.
+    Returns (cache, path_idx (B,N), n_acc (B,), bonus (B,))."""
+    qpos = cache["pos"][:, None] + depth
+    logits, staged = M.decode_step(
+        cfg, params, cache, tokens, tree_mask=mask, q_pos=qpos,
+        attn_backend=attn_backend,
+    )
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, N)
+    path, n_acc, bonus = greedy_accept_tree_batched(tokens, parents, count, nxt)
+    n_acc = jnp.where(live, n_acc, 0).astype(jnp.int32)
+    new_cache = M.commit_cache(cfg, cache, staged, path, n_acc)
+    return new_cache, path, n_acc, bonus
 
 
 def _verify_accept_commit(
@@ -96,16 +158,51 @@ class BatchedSpecServer:
         draft_spec: Optional[DraftSpec] = None,   # None -> PLD-only drafting
         fused: bool = True,            # False: seed-style per-step drafting (A/B)
         adaptive: bool = True,         # per-slot adaptive draft length
-        t_min: float = 1.05,           # min expected chain speedup to keep drafting
+        t_min: float = 1.05,           # min expected speedup to keep drafting
         min_obs: int = 4,              # per-slot observations before adapting
+        mode: Optional[str] = None,    # chain_fused | legacy | tree_fused
+        tree_expansions: int = 5,      # max tree expansion steps per round
+        tree_top_k: int = 2,           # sibling candidates per expansion
+        tree_top_p: float = 0.3,       # TOP-P sibling filter (P_tree)
+        tree_bucket: Optional[int] = None,   # padded tree size (default: fit)
+        attn_backend: Optional[str] = "auto",    # tree-verify staged pass
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
         self.draft_spec = draft_spec
-        self.fused = fused
+        if mode is None:
+            mode = "chain_fused" if fused else "legacy"
+        if mode not in PROPOSAL_MODES:
+            raise ValueError(f"unknown proposal mode {mode!r}; pick one of {PROPOSAL_MODES}")
+        self.mode = mode
+        self.fused = mode != "legacy"
         self.adaptive = adaptive
         self.t_min = t_min
         self.min_obs = min_obs
+        self.tree_expansions = tree_expansions
+        self.tree_top_k = tree_top_k
+        self.tree_top_p = tree_top_p
+        if attn_backend == "auto":
+            # the Pallas kernel only beats the jnp dense pass when compiled
+            # for real; off-TPU it would run in interpret mode (emulation)
+            attn_backend = "pallas" if jax.default_backend() == "tpu" else None
+        self.attn_backend = attn_backend
+        self.tree_bucket = tree_bucket
+        if mode == "tree_fused":
+            if cfg.num_codebooks or any(
+                cfg.block_kind(i) is not BlockKind.ATTENTION
+                for i in range(cfg.num_layers)
+            ):
+                raise ValueError(
+                    "tree_fused requires an attention-only text stack: staged "
+                    "SSM states are chain-ordered and cannot follow tree paths"
+                )
+            # worst case: root + PLD chain + top_k children per expansion
+            # step (an explicit too-small tree_bucket is rejected by
+            # tree_seed_arrays when the first round seeds the trees)
+            self.tree_bucket = tree_bucket or bucket_for(
+                1 + draft_k + tree_top_k * tree_expansions
+            )
         self.pld = PromptLookup(max_draft=draft_k)
         self.acceptance = AcceptanceTracker()
         self.costs = CostTracker()
@@ -121,7 +218,11 @@ class BatchedSpecServer:
             lambda p, c, t, g: M.decode_step(cfg, p, c, t, gates=g)
         )
         self._verify = jax.jit(functools.partial(_verify_accept_commit, cfg))
+        self._tree_verify = jax.jit(functools.partial(
+            _tree_verify_accept_commit, cfg, attn_backend=attn_backend,
+        ))
         self._draft_fns: Dict[int, callable] = {}   # scan steps -> jitted fn
+        self._tree_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
         self._gates = (
             None
             if draft_spec is None
@@ -179,6 +280,21 @@ class BatchedSpecServer:
         )
         return best_chain_length(alpha, max(c, 1e-3), self.k, self.t_min)
 
+    def _slot_tree_budget(self, slot: int) -> int:
+        """Tree expansion budget for a slot this round (Eq. 5 objective)."""
+        if self.draft_spec is None:
+            return 0
+        key = self._slot_key(slot)
+        if not self.adaptive or self.acceptance.counts(key) < self.min_obs:
+            return self.tree_expansions
+        alpha = self.acceptance.alpha(key)
+        c = self.costs.c_hat(
+            "tree_draft", default=float(self.draft_spec.prior_c)
+        )
+        return best_tree_expansions(
+            alpha, max(c, 1e-3), self.tree_expansions, self.t_min
+        )
+
     def _draft_fn(self, steps: int):
         fn = self._draft_fns.get(steps)
         if fn is None:
@@ -186,15 +302,24 @@ class BatchedSpecServer:
             self._draft_fns[steps] = fn
         return fn
 
-    # ------------------------------------------------------------- stepping
-    def _propose(self):
-        """Per-slot draft chains (B, k) — PLD first, neural fill-in.
+    def _tree_draft_fn(self, expansions: int):
+        fn = self._tree_draft_fns.get(expansions)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                tree_draft_scan, self.cfg, expansions, self.tree_top_k,
+                top_p=self.tree_top_p,
+            ))
+            self._tree_draft_fns[expansions] = fn
+        return fn
 
-        Returns (chains (B,k) int32, have (B,) int32). The neural fill-in is
-        a single fused scan dispatch covering every slot and draft step."""
+    # ------------------------------------------------------------- stepping
+    def _pld_chains(self):
+        """Per-slot PLD proposals (B, k) — free host-side retrieval drafts.
+
+        Also records where PLD ends per slot: the acceptance estimator that
+        prices the NEURAL draft must only see neural-token outcomes."""
         chains = np.zeros((self.B, self.k), np.int32)
         have = np.zeros(self.B, np.int32)
-        limit = np.zeros(self.B, np.int32)
         for b in range(self.B):
             if not self.live[b]:
                 continue
@@ -202,10 +327,19 @@ class BatchedSpecServer:
             toks = self.pld.propose(ctx, self.k)
             chains[b, : len(toks)] = toks
             have[b] = len(toks)
-            limit[b] = self._slot_limit(b)
-        # remember where PLD ends per slot: the acceptance estimator that
-        # prices the NEURAL draft must only see neural-token outcomes
         self._pld_have = have.copy()
+        return chains, have
+
+    def _propose(self):
+        """Per-slot draft chains (B, k) — PLD first, neural fill-in.
+
+        Returns (chains (B,k) int32, have (B,) int32). The neural fill-in is
+        a single fused scan dispatch covering every slot and draft step."""
+        chains, have = self._pld_chains()
+        limit = np.zeros(self.B, np.int32)
+        for b in range(self.B):
+            if self.live[b]:
+                limit[b] = self._slot_limit(b)
         if self.draft_spec is None:
             return chains, have
         if self.fused:
@@ -262,6 +396,8 @@ class BatchedSpecServer:
 
     def step(self) -> Dict[int, List[int]]:
         """One speculative round for the whole batch; returns new tokens."""
+        if self.mode == "tree_fused":
+            return self._step_tree()
         chains, have = self._propose()
         t0 = time.perf_counter()
         new_cache, nxt, n_chain, new_pending = jax.block_until_ready(
@@ -299,3 +435,88 @@ class BatchedSpecServer:
         self.pending = np.where(self.live, new_pending.astype(np.int64), self.pending)
         self.stats["steps"] += 1
         return out
+
+    def _step_tree(self) -> Dict[int, List[int]]:
+        """One DyTC round for the whole batch: PLD-seeded on-device tree
+        growth (ONE fused scan dispatch), then fused verify + path commit
+        (ONE target dispatch). Returns accepted tokens per live slot."""
+        chains, have = self._pld_chains()
+        limits = np.zeros(self.B, np.int32)
+        alphas = np.full(self.B, 0.5, np.float32)
+        for b in range(self.B):
+            if self.live[b]:
+                limits[b] = self._slot_tree_budget(b)
+                alphas[b] = self.acceptance.alpha(self._slot_key(b))
+        seed = tree_seed_arrays(
+            self.pending.astype(np.int32), chains, have, self.tree_bucket,
+            pld_alpha=PLD_SPEC.prior_alpha,
+        )
+        d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count = (
+            jnp.asarray(a) for a in seed
+        )
+        tokens, parents, count = seed[0], seed[1], seed[5]
+        first_neural = np.full(self.B, -1, np.int32)
+        expansions = int(limits.max(initial=0))
+        if expansions > 0:
+            c = self.costs.c_hat(
+                "tree_draft", default=float(self.draft_spec.prior_c)
+            )
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(self._tree_draft_fn(expansions)(
+                self.params, self.cache,
+                d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                jnp.asarray(limits), jnp.asarray(alphas),
+                jnp.asarray(max(c, 1e-3), jnp.float32),
+                jnp.asarray(self.t_min, jnp.float32),
+                self._gates,
+            ))
+            dt = time.perf_counter() - t0
+            # depth/mask stay on device (only the verify reads them); the
+            # host bookkeeping below needs tokens/parents/count/first only
+            d_tokens, d_parents, d_depth, _, d_mask, d_count, d_first = out
+            tokens, parents, count, first_neural = (
+                np.asarray(a) for a in (d_tokens, d_parents, d_count, d_first)
+            )
+            self.stats["draft_dispatches"] += 1
+            self.stats["draft_time"] += dt
+            self.stats["drafted_tokens"] += int(
+                np.clip(count - have - 1, 0, None).sum()
+            )
+            # per-expansion-step latency -> the c in the Eq. 5 budgets
+            self.costs.observe("tree_draft", dt, tokens=expansions)
+
+        t0 = time.perf_counter()
+        new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
+            self.params, self.cache,
+            d_tokens, d_parents, d_depth, d_mask, d_count,
+            jnp.asarray(self.live),
+        ))
+        dt = time.perf_counter() - t0
+        self.cache = new_cache
+        self.stats["target_calls"] += 1
+        self.stats["verify_time"] += dt
+        self.costs.observe_target(dt, tokens=1)
+
+        path, n_acc, bonus = np.asarray(path), np.asarray(n_acc), np.asarray(bonus)
+        out_toks: Dict[int, List[int]] = {}
+        for b in range(self.B):
+            if not self.live[b]:
+                continue
+            nodes = path[b, : n_acc[b]]
+            acc = [int(tokens[b, i]) for i in nodes]
+            self.contexts[b].extend(acc)
+            out_toks[b] = acc
+            self.stats["tokens"] += len(acc)
+            # Eq. 4 EMA: observe the slot's first NEURAL top-1 prediction,
+            # and only when its parent was accepted (DyTC's parent-accepted
+            # rule; the root is always accepted). When the drafter's top-1
+            # duplicated an existing PLD child, first_neural aliases that
+            # node — the outcome priced is still the neural prediction's.
+            fn = int(first_neural[b])
+            if fn >= 0:
+                node_set = {int(i) for i in nodes}
+                if int(parents[b, fn]) in node_set:
+                    self.acceptance.observe(self._slot_key(b), fn in node_set)
+        self.pending = np.where(self.live, bonus.astype(np.int64), self.pending)
+        self.stats["steps"] += 1
+        return out_toks

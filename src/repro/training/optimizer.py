@@ -6,7 +6,6 @@ free along the `model` axis.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Tuple
 
 import jax

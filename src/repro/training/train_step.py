@@ -1,8 +1,7 @@
 """Train step: causal-LM cross entropy + MoE aux losses + AdamW update."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -109,3 +109,36 @@ def test_dytc_accepts_more_than_ar():
     """On a repetitive prompt, DyTC must average > 1 token per round."""
     out, eng = run_sched(PROMPT, SCHEDULERS["DyTC"])
     assert eng.stats["accepted_tokens"] / eng.stats["rounds"] > 1.1
+
+
+@given(seed=st.integers(0, 10_000), plen=st.integers(4, 20))
+@settings(max_examples=4, deadline=None)
+def test_server_tree_fused_lossless(seed, plen):
+    """The batched ``tree_fused`` serving mode is lossless: greedy output is
+    token-identical to AR decoding for every slot, on arbitrary prompts."""
+    from repro.core.dsia import layer_sparsity
+    from repro.serving.server import BatchedSpecServer
+
+    rng = np.random.default_rng(seed)
+    base = rng.integers(2, CFG.vocab_size, size=plen)
+    prompts = [
+        np.tile(base, 3).astype(np.int32)[:32],
+        rng.integers(2, CFG.vocab_size, size=16).astype(np.int32),
+    ]
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=layer_sparsity(CFG, 0.4),
+                            mode="tree_fused", adaptive=True, min_obs=1)
+    gen = {0: [], 1: []}
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    for _ in range(6):
+        for b, toks in srv.step().items():
+            gen[b].extend(toks)
+    for i, p in enumerate(prompts):
+        assert gen[i] == ar_reference_n(p, len(gen[i])), f"slot {i} diverged"
+
+
+def ar_reference_n(prompt, n):
+    eng = SpecEngine(CFG, PARAMS, max_len=256)
+    eng.start(prompt)
+    return ARScheduler(eng).generate(n)

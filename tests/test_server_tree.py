@@ -1,0 +1,273 @@
+"""Batched on-device DyTC tree drafting (`tree_fused` serving mode):
+losslessness vs the B=1 reference, one drafting + one verify dispatch per
+round, Eq. 5 budgets, and pallas/jnp verify-backend parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.cascade import ARScheduler
+from repro.core.dsia import layer_sparsity
+from repro.core.engine import SpecEngine
+from repro.core.latency import best_tree_expansions
+from repro.core.tree import DraftTree, tree_seed_arrays
+from repro.core.verify import greedy_accept_tree, greedy_accept_tree_batched
+from repro.models import model as M
+from repro.serving.server import BatchedSpecServer
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+SPEC = layer_sparsity(CFG, 0.5)
+
+
+def _random_prompts(n, length, seed=0):
+    """High-entropy prompts: PLD proposes nothing, every draft token comes
+    from the neural tree scan."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(4, CFG.vocab_size - 1, size=length).astype(np.int32)
+            for _ in range(n)]
+
+
+def _repetitive_prompts():
+    return [
+        np.array([5, 6, 7, 8] * 4, np.int32),
+        np.array([9, 10, 11] * 5, np.int32),
+        np.array([3, 4] * 6, np.int32),
+    ]
+
+
+def _assert_matches_ar(srv, prompts, rounds):
+    for i, p in enumerate(prompts):
+        srv.add_request(i, p)
+    gen = {i: [] for i in range(len(prompts))}
+    for _ in range(rounds):
+        for b, toks in srv.step().items():
+            gen[b].extend(toks)
+    for i, p in enumerate(prompts):
+        eng = SpecEngine(CFG, PARAMS, max_len=256)
+        eng.start(p)
+        ref = ARScheduler(eng).generate(len(gen[i]))
+        assert ref == gen[i], f"slot {i} diverged"
+    return gen
+
+
+def test_tree_fused_matches_single_stream():
+    """tree_fused batched serving must emit exactly the B=1 greedy stream
+    for every slot (losslessness under divergent accepted path lengths)."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=3, max_len=256, draft_k=4,
+                            draft_spec=SPEC, mode="tree_fused",
+                            adaptive=True, min_obs=1)
+    _assert_matches_ar(srv, _repetitive_prompts(), rounds=8)
+
+
+def test_tree_fused_lossless_random_prompts():
+    """Random prompts keep PLD silent: every tree node is neural, and the
+    committed output must still be token-identical to AR."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, mode="tree_fused",
+                            adaptive=False)
+    _assert_matches_ar(srv, _random_prompts(2, 16, seed=3), rounds=6)
+
+
+def test_one_tree_dispatch_per_round():
+    """The fused tree path issues exactly ONE drafting dispatch and ONE
+    verify dispatch per round (the host DyTC loop pays one dispatch per
+    expansion plus one per verify)."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, mode="tree_fused",
+                            adaptive=False)
+    calls = []
+    orig = srv._tree_draft_fn
+
+    def counting(expansions):
+        fn = orig(expansions)
+
+        def wrapped(*a, **kw):
+            calls.append(expansions)
+            return fn(*a, **kw)
+
+        return wrapped
+
+    srv._tree_draft_fn = counting
+    for i, p in enumerate(_random_prompts(2, 24)):
+        srv.add_request(i, p)
+    n_rounds = 5
+    for _ in range(n_rounds):
+        srv.step()
+    assert len(calls) == n_rounds                    # one drafting dispatch/round
+    assert srv.stats["draft_dispatches"] == n_rounds
+    assert srv.stats["target_calls"] == n_rounds     # one verify dispatch/round
+    assert len(srv._tree_draft_fns) == 1             # fixed budget -> one compile
+    # PLD silent -> the first neural node hangs off the (always accepted)
+    # root, so every round observes an Eq. 4 outcome
+    assert srv.acceptance.counts(srv._slot_key(0)) == n_rounds
+
+
+def test_tree_budget_stops_drafting():
+    """An unmeetable t_min drives every slot's Eq. 5 budget to 0 — the
+    server degrades to PLD + AR inside the batched verify, losslessly."""
+    srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
+                            draft_spec=SPEC, mode="tree_fused",
+                            adaptive=True, min_obs=1, t_min=1e9)
+    _assert_matches_ar(srv, _random_prompts(2, 16, seed=5), rounds=6)
+    assert srv._slot_tree_budget(0) == 0 and srv._slot_tree_budget(1) == 0
+
+
+def test_tree_backend_parity():
+    """The pallas tree-attention verify backend and the pure-jnp dense pass
+    must produce identical greedy outputs."""
+    outs = []
+    for backend in ("pallas", None):
+        srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256,
+                                draft_k=4, draft_spec=SPEC, mode="tree_fused",
+                                adaptive=False, attn_backend=backend)
+        for i, p in enumerate(_repetitive_prompts()[:2]):
+            srv.add_request(i, p)
+        gen = {0: [], 1: []}
+        for _ in range(6):
+            for b, toks in srv.step().items():
+                gen[b].extend(toks)
+        outs.append(gen)
+    assert outs[0] == outs[1]
+
+
+def test_tree_and_chain_modes_agree():
+    """Same greedy stream whether proposals are trees or chains (both are
+    lossless; drafts only change how many tokens a round accepts, never
+    which tokens come out)."""
+    outs = []
+    for mode in ("tree_fused", "chain_fused"):
+        srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256,
+                                draft_k=4, draft_spec=SPEC, mode=mode,
+                                adaptive=False)
+        for i, p in enumerate(_repetitive_prompts()[:2]):
+            srv.add_request(i, p)
+        gen = {0: [], 1: []}
+        for _ in range(6):
+            for b, toks in srv.step().items():
+                gen[b].extend(toks)
+        outs.append(gen)
+    for b in (0, 1):
+        n = min(len(outs[0][b]), len(outs[1][b]))
+        assert n > 0 and outs[0][b][:n] == outs[1][b][:n]
+
+
+def test_batched_accept_walk_matches_host():
+    """greedy_accept_tree_batched must agree with the host-side walk on
+    branchy trees, including first-matching-child tie-breaks."""
+    rng = np.random.default_rng(0)
+    N = 16
+    for _ in range(20):
+        t = DraftTree(int(rng.integers(0, 50)))
+        for _ in range(int(rng.integers(0, 12))):
+            parent = int(rng.integers(0, len(t)))
+            t.add_child(parent, int(rng.integers(0, 50)), "c", 0.8)
+        n = len(t)
+        nxt = rng.integers(0, 50, size=N).astype(np.int32)
+        path_ref, bonus_ref = greedy_accept_tree(t, nxt[:n])
+
+        tokens = np.zeros((1, N), np.int32)
+        parents = np.full((1, N), -1, np.int32)
+        tokens[0, :n] = t.tokens
+        parents[0, :n] = t.parents
+        path, n_acc, bonus = map(np.asarray, greedy_accept_tree_batched(
+            jnp.asarray(tokens), jnp.asarray(parents),
+            jnp.asarray([n], jnp.int32), jnp.asarray(nxt[None]),
+        ))
+        assert list(path[0, : n_acc[0]]) == path_ref
+        assert int(bonus[0]) == bonus_ref
+
+
+def test_tree_scan_dedups_against_pld_seed():
+    """When the drafter's top-1 for the root equals the PLD-seeded child,
+    the scan must NOT add a duplicate sibling, and first_neural must alias
+    the PLD node — otherwise the Eq. 4 estimator records a rejection every
+    round the drafter AGREES with PLD and adaptively shuts off drafting on
+    exactly the good slots."""
+    import functools
+
+    from repro.core.engine import tree_draft_scan
+    from repro.core.tree import tree_seed_arrays
+
+    gates = jnp.asarray(SPEC.gates_array(CFG.num_layers))
+    prompt = np.array([5, 6, 7, 8] * 3, np.int32)
+    cache = M.init_cache(CFG, 1, 128)
+    last, cache = M.prefill(CFG, PARAMS, {"tokens": jnp.asarray(prompt[None])}, cache)
+    pending = np.argmax(np.asarray(last), -1).astype(np.int32)
+    # the drafter's actual top-1 after the root
+    lg, _ = M.decode_step(CFG, PARAMS, cache, jnp.asarray(pending[:, None]),
+                          gates=gates)
+    top1 = int(np.argmax(np.asarray(lg)[0, 0]))
+
+    chains = np.zeros((1, 4), np.int32)
+    chains[0, 0] = top1                       # PLD "proposed" the same token
+    have = np.array([1], np.int32)
+    seed = tree_seed_arrays(pending, chains, have, bucket=16)
+    fn = jax.jit(functools.partial(tree_draft_scan, CFG, 1, 2))
+    out = fn(PARAMS, cache, *(jnp.asarray(a) for a in seed),
+             jnp.asarray([1], jnp.int32), jnp.asarray([0.7], jnp.float32),
+             jnp.asarray(0.3, jnp.float32), jnp.asarray(1.0, jnp.float32),
+             gates)
+    tokens, parents, depth, p_acc, count, first_neural = (
+        np.asarray(out[i]) for i in (0, 1, 2, 3, 5, 6)
+    )
+    root_children = [i for i in range(count[0]) if parents[0, i] == 0]
+    child_tokens = [int(tokens[0, i]) for i in root_children]
+    assert len(set(child_tokens)) == len(child_tokens), "duplicate sibling"
+    assert child_tokens.count(top1) == 1
+    assert int(first_neural[0]) == 1          # aliases the PLD-seeded node
+    # ... and the confirmed node's P_acc is refreshed from the PLD prior
+    # to the neural score, so best-leaf selection keeps growing the chain
+    # the drafter just agreed with
+    assert p_acc[0, 1] >= 0.7 - 1e-6
+
+
+def test_eq5_tree_budget_monotone():
+    """best_tree_expansions: deeper budgets for better acceptance, shallower
+    for costlier drafts, zero when the best speedup misses t_min."""
+    es_alpha = [best_tree_expansions(a, 0.3, 8, t_min=1.0)
+                for a in (0.05, 0.3, 0.6, 0.9, 0.99)]
+    assert es_alpha == sorted(es_alpha)
+    assert es_alpha[-1] > es_alpha[0]
+
+    es_cost = [best_tree_expansions(0.8, c, 8, t_min=1.0)
+               for c in (0.02, 0.1, 0.3, 0.6, 0.95)]
+    assert es_cost == sorted(es_cost, reverse=True)
+
+    assert best_tree_expansions(0.1, 0.9, 8, t_min=1.1) == 0
+    assert best_tree_expansions(0.99, 0.01, 8, t_min=1.1) > 0
+
+
+def test_mode_validation():
+    with pytest.raises(ValueError, match="unknown proposal mode"):
+        BatchedSpecServer(CFG, {}, mode="nope")
+    # attention-only guard: codebook (audio) stacks cannot run tree_fused
+    audio_cfg = dataclasses.replace(CFG, num_codebooks=4)
+    with pytest.raises(ValueError, match="attention-only"):
+        BatchedSpecServer(audio_cfg, {}, mode="tree_fused")
+
+
+def test_tree_seed_arrays_shapes_and_masks():
+    pending = np.array([7, 9], np.int32)
+    chains = np.array([[1, 2, 3, 0], [4, 0, 0, 0]], np.int32)
+    have = np.array([3, 1], np.int32)
+    tokens, parents, depth, p_acc, mask, count = tree_seed_arrays(
+        pending, chains, have, bucket=8, pld_alpha=0.5
+    )
+    assert list(count) == [4, 2]
+    assert tokens[0, 0] == 7 and list(tokens[0, 1:4]) == [1, 2, 3]
+    assert list(parents[0, :4]) == [-1, 0, 1, 2]
+    assert list(depth[1, :2]) == [0, 1]
+    np.testing.assert_allclose(p_acc[0, :4], [1.0, 0.5, 0.25, 0.125])
+    # chain closure: node i sees exactly 0..i; unused slots are self-only
+    for b, n in enumerate(count):
+        for i in range(n):
+            assert set(np.flatnonzero(mask[b, i])) == set(range(i + 1))
+        for i in range(n, 8):
+            assert mask[b, i].sum() == 1 and mask[b, i, i]
+            assert not mask[b, :n, i].any()
+    with pytest.raises(ValueError, match="cannot hold"):
+        tree_seed_arrays(pending, chains, have, bucket=4)

@@ -1,0 +1,70 @@
+"""core.tree bucket padding and mask export: bucket_for boundaries, padded
+vs unpadded mask equivalence, and the error path past TREE_BUCKETS[-1].
+(Separate from test_tree.py so this coverage runs without hypothesis.)"""
+import numpy as np
+import pytest
+
+from repro.core.tree import TREE_BUCKETS, DraftTree, bucket_for, chain_tree
+
+
+def _branchy_tree(n_children):
+    t = DraftTree(1)
+    rng = np.random.default_rng(0)
+    for i in range(n_children):
+        t.add_child(int(rng.integers(0, len(t))), i + 2, "c", 0.8)
+    return t
+
+
+def test_bucket_for_boundary_values():
+    # exact bucket sizes map to themselves; one past maps to the next bucket
+    for b in TREE_BUCKETS:
+        assert bucket_for(b) == b
+    for lo, hi in zip(TREE_BUCKETS, TREE_BUCKETS[1:]):
+        assert bucket_for(lo + 1) == hi
+    assert bucket_for(0) == TREE_BUCKETS[0]
+    assert bucket_for(1) == TREE_BUCKETS[0]
+
+
+def test_bucket_for_past_largest_raises():
+    with pytest.raises(ValueError, match="tree too large"):
+        bucket_for(TREE_BUCKETS[-1] + 1)
+
+
+def test_flatten_rejects_oversized_tree():
+    t = chain_tree(0, list(range(TREE_BUCKETS[-1])), "c", 0.9)  # root + 128
+    assert len(t) == TREE_BUCKETS[-1] + 1
+    with pytest.raises(ValueError, match="tree too large"):
+        t.flatten()
+
+
+def test_padded_mask_equals_unpadded_prefix():
+    """flatten(bucket=T') for any larger bucket must agree with the natural
+    bucket on every real entry, and pad identically (self-only visibility,
+    out-of-range rel positions, real=False)."""
+    t = _branchy_tree(13)
+    n = len(t)
+    tokens, rel, mask, real = t.flatten()
+    T0 = bucket_for(n)
+    for T in [b for b in TREE_BUCKETS if b >= T0]:
+        tk, rl, mk, re = t.flatten(bucket=T)
+        assert tk.shape == (T,) and mk.shape == (T, T)
+        np.testing.assert_array_equal(tk[:n], tokens[:n])
+        np.testing.assert_array_equal(rl[:n], rel[:n])
+        np.testing.assert_array_equal(mk[:n, :n], mask[:n, :n])
+        np.testing.assert_array_equal(re[:n], real[:n])
+        # padding contract
+        assert not re[n:].any()
+        assert not mk[:n, n:].any()          # no real node sees padding
+        assert not mk[n:, :n].any()          # padding sees no real node
+        np.testing.assert_array_equal(
+            mk[n:, n:], np.eye(T - n, dtype=bool)
+        )
+        assert (rl[n:] > max(t.depth)).all()  # rope-distant pad positions
+
+
+def test_root_only_tree_pads_to_smallest_bucket():
+    t = DraftTree(42)
+    tokens, rel, mask, real = t.flatten()
+    assert tokens.shape == (TREE_BUCKETS[0],)
+    assert tokens[0] == 42 and real[0] and not real[1:].any()
+    assert mask[0, 0] and mask[0].sum() == 1
