@@ -45,15 +45,26 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(suites)
     os.makedirs(args.out, exist_ok=True)
     results = {}
+    canary: SystemExit = None
     for name, fn in suites.items():
         if name not in only:
             continue
         print(f"### {name}")
         t0 = time.time()
-        results[name] = fn()
+        try:
+            results[name] = fn()
+        except SystemExit as e:
+            # a smoke canary tripped — still persist the JSON, including
+            # any measured numbers riding on the exception (CI uploads it
+            # as an artifact; it is most useful exactly on failure)
+            canary = e
+            results[name] = dict(getattr(e, "results", {}),
+                                 canary_failed=str(e))
         print(f"### {name} done in {time.time()-t0:.1f}s")
     with open(os.path.join(args.out, "bench.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
+    if canary is not None:
+        raise canary
 
 
 if __name__ == "__main__":

@@ -30,8 +30,11 @@ class AcceptanceTracker:
         prev = self._alpha.get(config, self.prior)
         self._alpha[config] = self.lam * prev + (1.0 - self.lam) * recent
 
-    def alpha(self, config: str) -> float:
-        return self._alpha.get(config, self.prior)
+    def alpha(self, config: str, default: Optional[float] = None) -> float:
+        """Current estimate; ``default`` overrides the global cold-start
+        prior for configurations with their own App. D heuristic (e.g. the
+        per-level priors a ``DraftSpec`` carries)."""
+        return self._alpha.get(config, self.prior if default is None else default)
 
     def reset(self, config: str, alpha0: Optional[float] = None) -> None:
         """Drop a configuration's history (e.g. a server slot being reused

@@ -43,6 +43,28 @@ class DraftSpec:
         assert len(self.gates) == num_layers
         return np.asarray(self.gates, np.float32)
 
+    def prior_alpha_given(self, stronger: "DraftSpec") -> float:
+        """App. D cold-start prior for LEVEL-TO-LEVEL acceptance: how often
+        ``stronger`` (the next level up a cascade) agrees with this draft's
+        tokens. Both priors are calibrated against the target, so the
+        conditional prior is their ratio — a weaker judge accepts the same
+        draft at least as often as the target does — clipped to [prior, 1)."""
+        if stronger.prior_alpha <= 0:
+            return self.prior_alpha
+        return float(np.clip(self.prior_alpha / stronger.prior_alpha,
+                             self.prior_alpha, 0.98))
+
+    def unsupported_by_gates_only(self) -> Tuple[str, ...]:
+        """Spec fields a gates-only execution path silently could not honor
+        (the serving modes that draft with one shared executable + a gate
+        vector). ``cascade_fused`` is the mode that honors them."""
+        bad = []
+        if self.quantize is not None:
+            bad.append(f"quantize={self.quantize!r}")
+        if self.attn_override is not None:
+            bad.append(f"attn_override={self.attn_override!r}")
+        return tuple(bad)
+
 
 def layer_sparsity(cfg: ModelConfig, sparsity: float, name: Optional[str] = None) -> DraftSpec:
     """Skip ``sparsity`` fraction of layers, evenly interleaved, keeping the
@@ -129,7 +151,9 @@ def build_hierarchy(
         ls = layer_sparsity(cfg, sparsities[0])
         drafts = [ls, activation_quant(cfg, 8, base=layer_sparsity(cfg, sparsities[-1]))]
     elif mode == "replacing":
-        drafts = [activation_quant(cfg, 8), streaming_attention(cfg)]
+        # conflicting strategies as alternatives, cost-ordered: streaming
+        # attention (c~0.7) above the cheaper int8 quant level (c~0.55)
+        drafts = [streaming_attention(cfg), activation_quant(cfg, 8)]
     elif mode == "early_exit":
         drafts = [early_exit(cfg, 0.5), early_exit(cfg, 0.25)]
     else:

@@ -59,6 +59,9 @@ def chain_draft_scan(
     have: jax.Array,                  # (B,) int32 tokens already proposed (PLD)
     limit: jax.Array,                 # (B,) int32 per-slot adaptive draft cap
     gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
+    *,
+    quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
+    attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused k-step neural chain drafting: one ``lax.scan`` over draft steps.
 
@@ -88,7 +91,8 @@ def chain_draft_scan(
 
     def body(toks, j):
         logits, _ = M.decode_step(
-            cfg, params, cache, toks, gates=gates, tree_mask=mask
+            cfg, params, cache, toks, gates=gates, tree_mask=mask,
+            quantize=quantize, attn_override=attn_override,
         )
         nxt = jnp.argmax(logits, -1).astype(toks.dtype)          # (B, K+1)
         fill = (have <= j) & (j < limit)
@@ -119,6 +123,8 @@ def tree_draft_scan(
     gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
     *,
     top_p: float = 0.3,
+    quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
+    attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused DyTC tree growth: one ``lax.scan`` over expansion steps (§4.2).
 
@@ -170,7 +176,8 @@ def tree_draft_scan(
         tokens, parents, depth, p_acc, mask, count, active, first_neural = carry
         qpos = cache["pos"][:, None] + depth
         logits, _ = M.decode_step(
-            cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos
+            cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos,
+            quantize=quantize, attn_override=attn_override,
         )
         # Alg. 1 line 5: best active node by accumulated P_acc
         score = jnp.where(active, p_acc, -jnp.inf)
@@ -237,6 +244,155 @@ def tree_draft_scan(
     carry, _ = jax.lax.scan(body, carry, jnp.arange(expansions, dtype=jnp.int32))
     tokens, parents, depth, p_acc, mask, count, _, first_neural = carry
     return tokens, parents, depth, p_acc, mask, count, first_neural
+
+
+def cascade_rescore(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,                      # batched committed cache (read-only here)
+    tokens: jax.Array,                # (B, N) int32 node tokens from the level below
+    parents: jax.Array,               # (B, N) int32 (-1 root, -2 pruned, N unused)
+    depth: jax.Array,                 # (B, N) int32
+    p_acc: jax.Array,                 # (B, N) f32
+    mask: jax.Array,                  # (B, N, N) bool ancestor closure
+    count: jax.Array,                 # (B,) int32 node slots consumed
+    probe: jax.Array,                 # (B,) int32 node whose verdict to report (-1 none)
+    apply: jax.Array,                 # (B,) bool: slots routed through this level
+    alpha: jax.Array,                 # (B,) f32 this level's acceptance estimate
+    gates: Optional[jax.Array],       # (num_layers,) this level's DSIA gates
+    *,
+    quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
+    attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
+    attn_backend: Optional[str] = None,     # "pallas": kernel intra-tree pass
+):
+    """ONE intermediate-verify dispatch of a stronger cascade level — the
+    batched, on-device form of Alg. 1's level-to-level acceptance (the
+    vertical-cascade "verify and extend" that ``VCScheduler`` runs host-side
+    one request at a time, recast tree-natively).
+
+    The level decodes the whole padded node block under the ancestor-closure
+    masks (committed cache READ-ONLY — exactly the verification mechanism)
+    and then, per slot where ``apply``:
+
+      1. **endorse** — a node whose token equals this level's argmax at its
+         parent, with every proper ancestor likewise endorsed, is confirmed:
+         its P_acc is refreshed to this level's (stronger) estimate;
+      2. **hedge** — at the SHALLOWEST first-mismatch node, the level adds
+         its own argmax continuation as a *sibling* (skipped when an
+         endorsed sibling already carries that token). The cheaper level's
+         node is KEPT: the target may still accept it, and a tree hedges
+         instead of overwriting — this makes the rescored tree a strict
+         superset of the drafted tree, so a cascade round can never accept
+         fewer tokens than the drafter alone (the tree-cascade analogue of
+         "verify"; a chain cascade would truncate here);
+      3. **extend** — the deepest fully-endorsed node gets one new child
+         carrying this level's argmax continuation (the analogue of
+         "extend"; skipped when a sibling already carries that token, e.g.
+         the hedge node, or when the bucket is full).
+
+    Slots with ``apply=False`` pass through untouched (they ride the same
+    dispatch — per-slot routing never changes the executable).
+
+    Returns ``(tokens, parents, depth, p_acc, mask, count, level_node,
+    probe_ok, probe_valid)``: ``level_node[b]`` is the depth-1 node carrying
+    this level's own continuation of the root (-1 if none) — the next
+    level's Eq. 4 observation point, always judgeable because the root is
+    the target's own pending token; ``probe_ok``/``probe_valid`` report this
+    level's verdict on the INPUT node ``probe[b]`` (the level below's first
+    own prediction), valid only when the probe's ancestors were all
+    endorsed (DyTC's parent-accepted rule).
+    """
+    B, N = tokens.shape
+    b_idx = jnp.arange(B)
+    slot_j = jnp.arange(N)
+    qpos = cache["pos"][:, None] + depth
+    logits, _ = M.decode_step(
+        cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos,
+        quantize=quantize, attn_override=attn_override,
+        attn_backend=attn_backend,
+    )
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, N)
+
+    real = slot_j[None, :] < count[:, None]
+    has_parent = real & (parents >= 0)                           # non-root live
+    p_clip = jnp.clip(parents, 0, N - 1)
+    parent_nxt = jnp.take_along_axis(nxt, p_clip, axis=1)        # (B, N)
+    ok = jnp.where(has_parent, tokens == parent_nxt, True)
+    bad = has_parent & ~ok
+    eye = jnp.eye(N, dtype=bool)[None]
+    anc_bad = (mask & ~eye & bad[:, None, :]).any(-1)            # bad proper ancestor
+    # probe verdict BEFORE any mutation (the level below's first prediction)
+    probe_c = jnp.clip(probe, 0, N - 1)
+    probe_valid = apply & (probe >= 0) & ~jnp.take_along_axis(
+        anc_bad, probe_c[:, None], 1
+    )[:, 0]
+    probe_ok = jnp.take_along_axis(ok, probe_c[:, None], 1)[:, 0] & probe_valid
+
+    alpha = alpha.astype(jnp.float32)
+    parent_p = jnp.take_along_axis(p_acc, p_clip, axis=1)
+    endorsed = real & ~bad & ~anc_bad                            # root included
+    # endorse: refresh P_acc to this (stronger) level's estimate, exactly
+    # like the drafting scan refreshes a confirmed PLD seed
+    p_acc = jnp.where(
+        endorsed & has_parent & apply[:, None],
+        jnp.maximum(p_acc, parent_p * alpha[:, None]), p_acc,
+    )
+
+    def _append(tokens, parents, depth, p_acc, mask, count, at, tok, want):
+        """Add one child per slot under node ``at`` carrying ``tok`` (drop
+        when a sibling already has that token, the bucket is full, or
+        ``want`` is off). Returns updated arrays + the kept mask."""
+        real_now = slot_j[None, :] < count[:, None]
+        sib = (parents == at[:, None]) & real_now & (tokens == tok[:, None])
+        keep = want & ~sib.any(axis=1) & (count < N)
+        idx = jnp.where(keep, count, N)                          # N = dropped
+        a_depth = jnp.take_along_axis(depth, at[:, None], 1)[:, 0]
+        a_p = jnp.take_along_axis(p_acc, at[:, None], 1)[:, 0]
+        a_row = jnp.take_along_axis(mask, at[:, None, None], axis=1)[:, 0]
+        tokens = tokens.at[b_idx, idx].set(tok, mode="drop")
+        parents = parents.at[b_idx, idx].set(at, mode="drop")
+        depth = depth.at[b_idx, idx].set(a_depth + 1, mode="drop")
+        p_acc = p_acc.at[b_idx, idx].set(a_p * alpha, mode="drop")
+        mask = mask.at[b_idx, idx].set(
+            a_row | (slot_j[None, :] == idx[:, None]), mode="drop"
+        )
+        count = count + keep.astype(jnp.int32)
+        return tokens, parents, depth, p_acc, mask, count, keep
+
+    state = (tokens, parents, depth, p_acc, mask, count)
+    # hedge: a sibling with this level's own continuation at the SHALLOWEST
+    # first-mismatch (the most probable rejection point of the drafted tree)
+    cand = bad & ~anc_bad
+    has_hedge = cand.any(axis=1)
+    hedge_src = jnp.argmin(jnp.where(cand, depth, N + 1), axis=1).astype(jnp.int32)
+    hedge_at = jnp.take_along_axis(p_clip, hedge_src[:, None], 1)[:, 0]
+    hedge_tok = jnp.take_along_axis(parent_nxt, hedge_src[:, None], 1)[:, 0]
+    state = _append(*state, jnp.where(has_hedge, hedge_at, 0),
+                    hedge_tok, apply & has_hedge)[:-1]
+    # extend: one child below the deepest fully-endorsed node
+    frontier = jnp.argmax(jnp.where(endorsed, depth, -1), axis=1).astype(jnp.int32)
+    ext_tok = jnp.take_along_axis(nxt, frontier[:, None], 1)[:, 0]
+    state = _append(*state, frontier, ext_tok, apply)[:-1]
+    tokens, parents, depth, p_acc, mask, count = state
+
+    # this level's Eq. 4 observation point: the depth-1 node carrying its
+    # argmax continuation of the ROOT (the root is the target's own pending
+    # token, so the node's parent is ALWAYS accepted — first-token
+    # acceptance, exactly the chain path's estimator). After substitution /
+    # extension such a node exists whenever the slot was rescored: an
+    # endorsed draft child, a substituted child, or the appended extension
+    # when the tree was empty. An endorsed child counts as this level's own
+    # prediction — endorsement means its token EQUALS this level's argmax.
+    root_nxt = nxt[:, 0]
+    real_now = slot_j[None, :] < count[:, None]                  # incl. appended
+    lvl_cand = (parents == 0) & real_now & (tokens == root_nxt[:, None])
+    level_node = jnp.where(
+        apply & lvl_cand.any(axis=1),
+        jnp.argmax(lvl_cand, axis=1).astype(jnp.int32),
+        jnp.int32(-1),
+    )
+    return (tokens, parents, depth, p_acc, mask, count,
+            level_node, probe_ok, probe_valid)
 
 
 class SpecEngine:

@@ -14,7 +14,7 @@ numpy-vectorized variants where the benchmarks sweep grids.
 from __future__ import annotations
 
 import math
-from typing import Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 
@@ -176,6 +176,51 @@ def hc_bound_c_d1_numeric(
         else:
             hi = mid
     return lo
+
+
+# -------------------------------------------------- multi-level cascade EWIF
+def t_cascade(alphas: Sequence[float], cs: Sequence[float], k: int) -> float:
+    """EWIF of an L-level vertical draft cascade, one inner round per level.
+
+    Generalizes Eq. 1 / ``t_vc`` to the fused serving runtime, where the
+    cheapest level drafts ``k`` tokens in one scan and every stronger level
+    verifies-and-extends the proposal in ONE block forward before the target
+    verifies (``cascade_fused``):
+
+      - ``alphas[0]``   — target's acceptance of the strongest level's tokens
+      - ``alphas[i>0]`` — level i-1's acceptance of level i's tokens
+      - ``cs[i]``       — cost coefficient of level i (vs one target forward)
+
+    Time per round: ``cs[-1]*k`` (the drafting scan) + one block forward per
+    rescoring level (``sum(cs[:-1])``) + 1 (target verify). Tokens per
+    round: the endorsement recursion — each level turns an e-token proposal
+    into an expected ``(1 - a^{e+1}) / (1 - a)`` endorsed chain (accepted
+    prefix + its own one-token extension), and the target's acceptance of
+    the final chain uses the same form.
+    """
+    if len(alphas) != len(cs) or not alphas:
+        raise ValueError("alphas and cs must be equal-length, non-empty")
+    e = float(k)
+    for a in reversed(list(alphas)):           # cheapest-adjacent level first
+        a = min(float(a), 1.0 - 1e-9)
+        e = (1.0 - a ** (e + 1.0)) / (1.0 - a)
+    # after folding alphas[0] the recursion already counts the bonus token
+    time = 1.0 + cs[-1] * k + sum(cs[:-1])
+    return e / time
+
+
+def best_cascade_k(
+    alphas: Sequence[float], cs: Sequence[float], k_max: int
+) -> Tuple[float, int]:
+    """argmax_k of the cascade EWIF (the Eq. 5 budget for the cheapest
+    level's drafting scan). Returns (best value, best k); k=0 means the
+    cascade never beats plain verification."""
+    best_v, best_k = -math.inf, 0
+    for k in range(1, max(k_max, 0) + 1):
+        v = t_cascade(alphas, cs, k)
+        if v > best_v:
+            best_v, best_k = v, k
+    return best_v, best_k
 
 
 # ------------------------------------------------------------- DyTC objective

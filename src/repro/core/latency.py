@@ -117,6 +117,48 @@ def best_chain_length(
     return best_k if best_v >= t_min else 0
 
 
+def best_cascade_plan(
+    alphas: Sequence[float],
+    cs: Sequence[float],
+    alpha_direct: float,
+    e_max: int,
+    t_min: float = 1.0,
+) -> tuple:
+    """Per-slot routing + budget split for the ``cascade_fused`` mode.
+
+    Compares the Eq. 5 objective of three executions of one serving round
+    and returns ``(expansions, use_rescore)``:
+
+      - **cascade**  — the cheapest level drafts ``k`` tokens, every
+        stronger level rescores in one block forward, the target verifies:
+        ``ewif.t_cascade(alphas, cs, k)`` maximized over k;
+      - **single-level** — the cheapest level drafts straight for the
+        target (no intermediate rescores), priced with ``alpha_direct``
+        (the slot's tracked cheap-vs-target acceptance, or the App. D
+        compositional prior ``prod(alphas)`` before any observation);
+      - **PLD-only** — ``(0, False)``: no neural work, speedup 1.0.
+
+    A slot whose best option misses ``t_min`` collapses to PLD-only — the
+    DyTC stop rule applied to the whole hierarchy.
+    """
+    from repro.core.ewif import best_cascade_k, t_sd
+
+    v_casc, k_casc = best_cascade_k(alphas, cs, e_max)
+    if len(alphas) < 2:
+        v_casc = -1.0                       # no level to rescore with
+    v_single, k_single = 1.0, 0
+    for k in range(1, max(e_max, 0) + 1):
+        v = t_sd(alpha_direct, max(cs[-1], 1e-3), k)
+        if v > v_single:
+            v_single, k_single = v, k
+    best = max(v_casc, v_single)
+    if best < t_min:
+        return 0, False
+    if v_casc >= v_single:
+        return k_casc, True
+    return k_single, False
+
+
 def best_tree_expansions(
     alpha: float, c: float, e_max: int, t_min: float = 1.0
 ) -> int:

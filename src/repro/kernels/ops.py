@@ -92,8 +92,18 @@ def verify_attention(
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def quantized_matmul(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """W8A8 dynamic quantized x @ w with padding to 128-tiles."""
+def quantized_matmul(
+    x: jax.Array, w: jax.Array, *, interpret: bool | None = None
+) -> jax.Array:
+    """W8A8 dynamic quantized x @ w with padding to 128-tiles.
+
+    ``interpret`` defaults to backend-aware: compiled on TPU, interpreter
+    everywhere else (the kernel only lowers on TPU) — callers on TPU get
+    the real kernel without remembering the flag. Pass an explicit bool to
+    override (e.g. CPU parity tests force ``interpret=True``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     M0, K0 = x.shape
     N0 = w.shape[1]
     x_q, xs = quantize_rows(x)

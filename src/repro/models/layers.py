@@ -35,11 +35,36 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
 
 # ----------------------------------------------------------------------- MLP
-def mlp_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+def _mm(x: jax.Array, w: jax.Array, quantize) -> jax.Array:
+    """(..., d) @ (d, f), optionally through the W8A8 Pallas kernel.
+
+    ``quantize="int8"`` routes the matmul through
+    ``kernels.ops.quantized_matmul`` (dynamic per-row activation / per-col
+    weight int8 — the ActivationQuant DSIA's TPU execution; off-TPU the
+    kernel runs interpreted, so CPU callers simulate with fake-quantized
+    weights instead and never set the flag on hot paths).
+    """
+    if quantize is None:
+        return jnp.einsum("...d,df->...f", x, w)
+    if quantize != "int8":
+        raise ValueError(f"unsupported quantize mode {quantize!r}")
+    from repro.kernels.ops import quantized_matmul
+
+    lead = x.shape[:-1]
+    out = quantized_matmul(x.reshape(-1, x.shape[-1]), w)
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def mlp_apply(
+    params: dict, x: jax.Array, act: str, gated: bool, quantize=None
+) -> jax.Array:
     """SwiGLU/GeGLU (gated) or plain 2-matrix MLP.
 
     Weights are pinned to their TP spec at the use site so FSDP-stored
     shards are gathered over 'data' (cheap) rather than the activations.
+    ``quantize`` routes the three projections through the W8A8 kernel (the
+    MLP carries the bulk of the stack's matmul FLOPs; attention projections
+    and the LM head stay in the model dtype).
     """
     from repro.models.shard_utils import constrain_full
 
@@ -48,11 +73,11 @@ def mlp_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
     w_down = constrain_full(params["w_down"], "model", None)
     if gated:
         w_gate = constrain_full(params["w_gate"], None, "model")
-        g = fn(jnp.einsum("...d,df->...f", x, w_gate))
-        u = jnp.einsum("...d,df->...f", x, w_up)
-        return jnp.einsum("...f,fd->...d", g * u, w_down)
-    h = fn(jnp.einsum("...d,df->...f", x, w_up))
-    return jnp.einsum("...f,fd->...d", h, w_down)
+        g = fn(_mm(x, w_gate, quantize))
+        u = _mm(x, w_up, quantize)
+        return _mm(g * u, w_down, quantize)
+    h = fn(_mm(x, w_up, quantize))
+    return _mm(h, w_down, quantize)
 
 
 def mlp_init(key: jax.Array, d_model: int, d_ff: int, gated: bool, dtype) -> dict:

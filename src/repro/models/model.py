@@ -315,7 +315,10 @@ def _mamba_layer(
     return out * gate, staged
 
 
-def _mlp_layer(cfg: ModelConfig, p: dict, spec: LayerSpec, h, gate, aux_sum, mode: str):
+def _mlp_layer(
+    cfg: ModelConfig, p: dict, spec: LayerSpec, h, gate, aux_sum, mode: str,
+    quantize=None,
+):
     x = rms_norm(h, p["norm2"], cfg.norm_eps)
     if spec.is_moe:
         if mode == "train":
@@ -324,12 +327,14 @@ def _mlp_layer(cfg: ModelConfig, p: dict, spec: LayerSpec, h, gate, aux_sum, mod
             moe_mode = "infer_grouped"     # TPU prefill: sharded capacity path
         else:
             moe_mode = "infer"             # dropless — batch-invariant decode
+        # expert matmuls stay in the model dtype: the ActivationQuant DSIA
+        # quantizes the dense-MLP hot path only (see docs/cascade.md)
         y, aux = moe_lib.moe_apply(
             p["moe"], x, cfg.moe, cfg.act, cfg.mlp_gated, mode=moe_mode,
         )
         aux_sum = aux_sum + aux["load_balance"] + aux["router_z"]
     else:
-        y = mlp_apply(p["mlp"], x, cfg.act, cfg.mlp_gated)
+        y = mlp_apply(p["mlp"], x, cfg.act, cfg.mlp_gated, quantize=quantize)
     return y * gate, aux_sum
 
 
@@ -348,6 +353,7 @@ def _run_stack(
     attn_override: Optional[dict] = None,
     seq_axes: Optional[tuple] = None,
     attn_backend: Optional[str] = None,
+    quantize: Optional[str] = None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (hidden, staged_or_new_cache_segments, moe_aux_sum)."""
     segs = layout(cfg)
@@ -388,7 +394,9 @@ def _run_stack(
                     delta, staged = _mamba_layer(cfg, p_l, hh, mode, lc, gate)
                 hh = hh + delta
                 if spec.has_mlp:
-                    delta2, aux_c = _mlp_layer(cfg, p_l, spec, hh, gate, aux_c, mode)
+                    delta2, aux_c = _mlp_layer(
+                        cfg, p_l, spec, hh, gate, aux_c, mode, quantize
+                    )
                     hh = hh + delta2
                 staged_u.append(staged)
             return (hh, aux_c), tuple(staged_u)
@@ -542,12 +550,16 @@ def decode_step(
     attn_override: Optional[dict] = None,    # efficient-attention DSIA
     seq_axes: Optional[tuple] = None,        # context-parallel cache partials
     attn_backend: Optional[str] = None,      # "pallas": kernel tree-verify pass
+    quantize: Optional[str] = None,          # "int8": W8A8 MLP matmuls (DSIA)
 ) -> Tuple[jax.Array, Any]:
     """Stage-only decode of T tokens against a frozen cache.
 
     Returns (logits (B,T,[nc,]V), staged) — commit with ``commit_cache``.
     A 3-D tree mask carries one ancestor-closure per sequence (batched tree
     verification); paired with a (B, T) ``q_pos`` of per-node depths.
+    ``quantize="int8"`` routes the dense-MLP matmuls through the Pallas
+    W8A8 kernel (ActivationQuant DSIA drafting; TPU-compiled — off-TPU
+    callers simulate with ``engine.fake_quant_int8`` params instead).
     """
     h = _embed(cfg, params, {"tokens": tokens})
     B, T = tokens.shape[0], tokens.shape[1]
@@ -558,7 +570,7 @@ def decode_step(
     h, staged, _ = _run_stack(
         cfg, params, h, mode="decode", cache=cache, gates=gates,
         q_pos=q_pos, tree_mask=tree_mask, attn_override=attn_override,
-        seq_axes=seq_axes, attn_backend=attn_backend,
+        seq_axes=seq_axes, attn_backend=attn_backend, quantize=quantize,
     )
     return _head(cfg, params, h), staged
 

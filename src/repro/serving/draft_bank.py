@@ -1,0 +1,169 @@
+"""Draft-level bank: a §4.1 DSIA hierarchy materialized into executable
+batched levels for the ``cascade_fused`` serving mode.
+
+``dsia.build_hierarchy`` describes a hierarchy *symbolically* (DraftSpec
+per level: gates / quantize / attn_override + App. D cold-start priors).
+The bank turns each neural level into something the batched runtime can
+dispatch directly:
+
+  - **gates** — the per-layer 0/1 vector as a device-ready float array
+    (layer-sparsity / early-exit levels share the target's params and
+    executable, exactly like ``chain_fused``/``tree_fused`` drafting);
+  - **int8 levels** — execution is backend-aware. On TPU the level shares
+    the ORIGINAL params and sets ``quantize="int8"`` on its decode calls,
+    which routes the dense-MLP matmuls through the Pallas
+    ``kernels.quantized_matmul`` W8A8 kernel (dynamic quantization in the
+    kernel: no second parameter copy in HBM). Off-TPU the kernel would run
+    interpreted (orders of magnitude slower than XLA), so the bank
+    materializes a fake-quantized parameter copy ONCE via
+    ``engine.fake_quant_int8`` — the CPU numerics simulation of the same
+    contract (``tests/test_int8_parity.py`` pins the two paths together).
+    ``param_bytes`` reports the memory cost of every materialized copy;
+  - **attn_override** — StreamingAttention levels carry the override dict
+    that ``models.model.decode_step`` applies to full-attention layers.
+
+Level order follows the hierarchy: ``levels[0]`` is the strongest (closest
+to the target), ``levels[-1]`` the cheapest — the cascade drafter. The
+retrieval bottom (PLD) is kept as ``bank.pld`` for priors; it never
+executes on device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.dsia import DraftSpec, PLD_SPEC
+from repro.core.engine import fake_quant_int8
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftLevel:
+    """One executable cascade level (see module docstring)."""
+    index: int                       # 0 = strongest, len-1 = cheapest/drafter
+    spec: DraftSpec
+    params: dict                     # executable params (shared or int8 copy)
+    gates: Optional[np.ndarray]      # (num_layers,) f32, None = all layers on
+    quantize: Optional[str]          # "int8" -> W8A8 kernel path at decode
+    attn_override: Optional[dict]    # {"kind","window","sink"} or None
+    owns_params: bool                # True iff ``params`` is a quantized copy
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+class DraftBank:
+    """Materialized DSIA hierarchy + per-(level, slot) tracker key schema.
+
+    ``int8_exec`` picks the ActivationQuant execution:
+      - ``"auto"``   — kernel on TPU, fake-quant simulation elsewhere;
+      - ``"kernel"`` — force the Pallas W8A8 path (interpret-mode off TPU;
+        only sensible in parity tests);
+      - ``"sim"``    — force the fake-quant parameter copy.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        hierarchy: Sequence[DraftSpec],
+        *,
+        int8_exec: str = "auto",
+    ):
+        if int8_exec not in ("auto", "kernel", "sim"):
+            raise ValueError(f"unknown int8_exec {int8_exec!r}")
+        if int8_exec == "auto":
+            int8_exec = "kernel" if jax.default_backend() == "tpu" else "sim"
+        self.cfg = cfg
+        neural = [s for s in hierarchy if s.kind == "neural"]
+        retrieval = [s for s in hierarchy if s.kind == "retrieval"]
+        if not neural:
+            raise ValueError("hierarchy has no neural level to execute")
+        self.pld: DraftSpec = retrieval[0] if retrieval else PLD_SPEC
+        self.param_bytes = 0
+        self.levels: List[DraftLevel] = []
+        quant_cache: Dict[int, dict] = {}    # share one int8 copy per base
+        for i, spec in enumerate(neural):
+            gates = None
+            if spec.gates is not None:
+                gates = spec.gates_array(cfg.num_layers)
+            level_params, quantize, owns = params, None, False
+            if spec.quantize is not None:
+                if spec.quantize != "int8":
+                    raise ValueError(
+                        f"level {spec.name!r}: unsupported quantize "
+                        f"{spec.quantize!r} (only 'int8')"
+                    )
+                if int8_exec == "kernel":
+                    quantize = "int8"        # dynamic in-kernel quantization
+                else:
+                    if id(params) not in quant_cache:
+                        quant_cache[id(params)] = fake_quant_int8(params)
+                    level_params, owns = quant_cache[id(params)], True
+            override = None
+            if spec.attn_override is not None:
+                kind, window, sink = spec.attn_override
+                override = {"kind": kind, "window": window, "sink": sink}
+            self.levels.append(DraftLevel(
+                index=i, spec=spec, params=level_params, gates=gates,
+                quantize=quantize, attn_override=override, owns_params=owns,
+            ))
+        self.param_bytes = sum(
+            leaf.nbytes
+            for p in quant_cache.values()
+            for leaf in jax.tree.leaves(p)
+            if hasattr(leaf, "nbytes")
+        )
+
+    # ------------------------------------------------------------- accessors
+    def __len__(self) -> int:
+        return len(self.levels)
+
+    @property
+    def drafter(self) -> DraftLevel:
+        """The cheapest level — runs the drafting scan."""
+        return self.levels[-1]
+
+    @property
+    def rescorers(self) -> List[DraftLevel]:
+        """Stronger levels in rescore order: just-above-drafter first, the
+        strongest (target-adjacent) level last."""
+        return self.levels[-2::-1]
+
+    # ------------------------------------------------- tracker key schema
+    def slot_key(self, level: int, slot: int) -> str:
+        """Acceptance key for (level, slot): level 0's alpha prices target
+        acceptance of the strongest level's tokens; level i>0's alpha prices
+        level i-1's acceptance of level i's tokens."""
+        return f"casc{level}:{slot}"
+
+    def direct_key(self, slot: int) -> str:
+        """Acceptance of the CHEAPEST level's tokens directly by the target
+        (observed only on rounds routed single-level — prices the
+        no-rescore plan in ``latency.best_cascade_plan``)."""
+        return f"cascdir:{slot}"
+
+    def cost_key(self, level: int) -> str:
+        return f"casc_rescore:{self.levels[level].name}"
+
+    # ------------------------------------------------------- App. D priors
+    def alpha_prior(self, level: int) -> float:
+        """Cold-start acceptance prior for ``slot_key(level, ·)``."""
+        spec = self.levels[level].spec
+        if level == 0:
+            return float(spec.prior_alpha)
+        return spec.prior_alpha_given(self.levels[level - 1].spec)
+
+    def direct_prior(self) -> float:
+        """Compositional cold-start prior for the cheapest-vs-target plan."""
+        p = 1.0
+        for i in range(len(self.levels)):
+            p *= self.alpha_prior(i)
+        return float(p)
+
+    def c_prior(self, level: int) -> float:
+        return float(self.levels[level].spec.prior_c)

@@ -1,6 +1,6 @@
 """Batched speculative serving (continuous batching + cascades).
 
-Three proposal modes (see docs/serving.md):
+Four proposal modes (see docs/serving.md):
 
   - ``chain_fused``  — per-slot PLD proposals merged with a batched
     layer-sparse neural *chain* draft, one ``lax.scan`` dispatch per round
@@ -12,8 +12,18 @@ Three proposal modes (see docs/serving.md):
     single fused ``tree_draft_scan`` dispatch, and tree verification +
     longest-accepted-path commit is one fused target call whose intra-tree
     attention can route through ``kernels.tree_attention``.
+  - ``cascade_fused`` — the paper's namesake multi-level cascade (§4.1 +
+    Alg. 1), batched: a ``DraftBank`` materializes a DSIA hierarchy
+    (layer-sparsity gates, int8 activation-quant params, attention
+    overrides), the CHEAPEST level grows every slot's tree in one scan
+    dispatch, each stronger level rescores the proposal in one
+    intermediate-verify dispatch (``core.engine.cascade_rescore`` —
+    level-to-level endorsement, hedge siblings, and extension), and the
+    target verifies + commits as in ``tree_fused``. Dispatches per round
+    are bounded at (1 per cascade level) + 1 target verify. See
+    docs/cascade.md.
 
-All three verify jointly in one target forward and commit per-sequence
+All modes verify jointly in one target forward and commit per-sequence
 (divergent accepted lengths are supported by the (B,)-pos cache).
 
 Fused drafting
@@ -76,15 +86,21 @@ import numpy as np
 
 from repro.config.base import BlockKind, ModelConfig
 from repro.core.acceptance import AcceptanceTracker
-from repro.core.dsia import DraftSpec, PLD_SPEC
-from repro.core.engine import chain_draft_scan, tree_draft_scan
-from repro.core.latency import CostTracker, best_chain_length, best_tree_expansions
+from repro.core.dsia import DraftSpec, PLD_SPEC, build_hierarchy
+from repro.core.engine import cascade_rescore, chain_draft_scan, tree_draft_scan
+from repro.core.latency import (
+    CostTracker,
+    best_cascade_plan,
+    best_chain_length,
+    best_tree_expansions,
+)
 from repro.core.pld import PromptLookup
 from repro.core.tree import bucket_for, tree_seed_arrays
 from repro.core.verify import greedy_accept_tree_batched
 from repro.models import model as M
+from repro.serving.draft_bank import DraftBank
 
-PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused")
+PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused", "cascade_fused")
 
 
 def _tree_verify_accept_commit(
@@ -160,12 +176,14 @@ class BatchedSpecServer:
         adaptive: bool = True,         # per-slot adaptive draft length
         t_min: float = 1.05,           # min expected speedup to keep drafting
         min_obs: int = 4,              # per-slot observations before adapting
-        mode: Optional[str] = None,    # chain_fused | legacy | tree_fused
+        mode: Optional[str] = None,    # chain_fused | legacy | tree_fused | cascade_fused
         tree_expansions: int = 5,      # max tree expansion steps per round
         tree_top_k: int = 2,           # sibling candidates per expansion
         tree_top_p: float = 0.3,       # TOP-P sibling filter (P_tree)
         tree_bucket: Optional[int] = None,   # padded tree size (default: fit)
         attn_backend: Optional[str] = "auto",    # tree-verify staged pass
+        hierarchy: Optional[List[DraftSpec]] = None,  # cascade_fused levels
+        int8_exec: str = "auto",       # bank int8 path: auto | kernel | sim
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
@@ -174,6 +192,23 @@ class BatchedSpecServer:
             mode = "chain_fused" if fused else "legacy"
         if mode not in PROPOSAL_MODES:
             raise ValueError(f"unknown proposal mode {mode!r}; pick one of {PROPOSAL_MODES}")
+        if draft_spec is not None:
+            if mode == "cascade_fused":
+                raise ValueError(
+                    "cascade_fused drafts from a hierarchy, not a single "
+                    "draft_spec — pass hierarchy=[...] (or leave both unset "
+                    "for the default mixing hierarchy)"
+                )
+            unsupported = draft_spec.unsupported_by_gates_only()
+            if unsupported:
+                raise ValueError(
+                    f"mode {mode!r} drafts gates-only and cannot honor "
+                    f"{', '.join(unsupported)} on draft_spec "
+                    f"{draft_spec.name!r}; mode='cascade_fused' executes "
+                    "quantize/attn_override levels through the draft bank"
+                )
+        if hierarchy is not None and mode != "cascade_fused":
+            raise ValueError("hierarchy=... requires mode='cascade_fused'")
         self.mode = mode
         self.fused = mode != "legacy"
         self.adaptive = adaptive
@@ -188,20 +223,31 @@ class BatchedSpecServer:
             attn_backend = "pallas" if jax.default_backend() == "tpu" else None
         self.attn_backend = attn_backend
         self.tree_bucket = tree_bucket
-        if mode == "tree_fused":
+        self.bank: Optional[DraftBank] = None
+        if mode in ("tree_fused", "cascade_fused"):
             if cfg.num_codebooks or any(
                 cfg.block_kind(i) is not BlockKind.ATTENTION
                 for i in range(cfg.num_layers)
             ):
                 raise ValueError(
-                    "tree_fused requires an attention-only text stack: staged "
+                    f"{mode} requires an attention-only text stack: staged "
                     "SSM states are chain-ordered and cannot follow tree paths"
                 )
             # worst case: root + PLD chain + top_k children per expansion
             # step (an explicit too-small tree_bucket is rejected by
             # tree_seed_arrays when the first round seeds the trees)
+            extra = 0
+            if mode == "cascade_fused":
+                self.bank = DraftBank(
+                    cfg, params,
+                    hierarchy if hierarchy is not None
+                    else build_hierarchy(cfg, "mixing"),
+                    int8_exec=int8_exec,
+                )
+                # one hedge sibling + one extension node per rescore level
+                extra = 2 * len(self.bank.rescorers)
             self.tree_bucket = tree_bucket or bucket_for(
-                1 + draft_k + tree_top_k * tree_expansions
+                1 + draft_k + tree_top_k * tree_expansions + extra
             )
         self.pld = PromptLookup(max_draft=draft_k)
         self.acceptance = AcceptanceTracker()
@@ -223,15 +269,24 @@ class BatchedSpecServer:
         ))
         self._draft_fns: Dict[int, callable] = {}   # scan steps -> jitted fn
         self._tree_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
+        self._casc_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
+        self._rescore_fns: Dict[int, callable] = {}      # level index -> jitted fn
         self._gates = (
             None
             if draft_spec is None
             else jnp.asarray(draft_spec.gates_array(cfg.num_layers))
         )
+        self._level_gates: Dict[int, Optional[jax.Array]] = {}
+        if self.bank is not None:
+            for lvl in self.bank.levels:
+                self._level_gates[lvl.index] = (
+                    None if lvl.gates is None else jnp.asarray(lvl.gates)
+                )
         self.stats = {
             "steps": 0, "tokens": 0, "target_calls": 0,
             "draft_dispatches": 0, "draft_time": 0.0, "verify_time": 0.0,
             "drafted_tokens": 0,
+            "rescore_dispatches": 0, "rescore_time": 0.0,
         }
 
     # ------------------------------------------------------------ admission
@@ -248,6 +303,14 @@ class BatchedSpecServer:
         # continuous batching reuses slots across unrelated requests
         prior = self.draft_spec.prior_alpha if self.draft_spec else 0.5
         self.acceptance.reset(self._slot_key(slot), alpha0=prior)
+        if self.bank is not None:
+            for i in range(len(self.bank)):
+                self.acceptance.reset(
+                    self.bank.slot_key(i, slot), alpha0=self.bank.alpha_prior(i)
+                )
+            self.acceptance.reset(
+                self.bank.direct_key(slot), alpha0=self.bank.direct_prior()
+            )
 
     def release(self, slot: int) -> None:
         """Mark a slot free (its request finished or was cancelled)."""
@@ -310,6 +373,35 @@ class BatchedSpecServer:
                 top_p=self.tree_top_p,
             ))
             self._tree_draft_fns[expansions] = fn
+        return fn
+
+    def _casc_draft_fn(self, expansions: int):
+        """The cascade's drafting scan: ``tree_draft_scan`` bound to the
+        CHEAPEST bank level's static execution (quantize/attn_override);
+        its params/gates arrive as call arguments."""
+        fn = self._casc_draft_fns.get(expansions)
+        if fn is None:
+            drafter = self.bank.drafter
+            fn = jax.jit(functools.partial(
+                tree_draft_scan, self.cfg, expansions, self.tree_top_k,
+                top_p=self.tree_top_p, quantize=drafter.quantize,
+                attn_override=drafter.attn_override,
+            ))
+            self._casc_draft_fns[expansions] = fn
+        return fn
+
+    def _rescore_fn(self, level: int):
+        """One jitted intermediate-verify dispatch for bank level
+        ``level`` (Alg. 1 level-to-level acceptance)."""
+        fn = self._rescore_fns.get(level)
+        if fn is None:
+            lvl = self.bank.levels[level]
+            fn = jax.jit(functools.partial(
+                cascade_rescore, self.cfg, quantize=lvl.quantize,
+                attn_override=lvl.attn_override,
+                attn_backend=self.attn_backend,
+            ))
+            self._rescore_fns[level] = fn
         return fn
 
     # ------------------------------------------------------------- stepping
@@ -398,6 +490,8 @@ class BatchedSpecServer:
         """One speculative round for the whole batch; returns new tokens."""
         if self.mode == "tree_fused":
             return self._step_tree()
+        if self.mode == "cascade_fused":
+            return self._step_cascade()
         chains, have = self._propose()
         t0 = time.perf_counter()
         new_cache, nxt, n_chain, new_pending = jax.block_until_ready(
@@ -517,6 +611,178 @@ class BatchedSpecServer:
                 node_set = {int(i) for i in nodes}
                 if int(parents[b, fn]) in node_set:
                     self.acceptance.observe(self._slot_key(b), fn in node_set)
+        self.pending = np.where(self.live, bonus.astype(np.int64), self.pending)
+        self.stats["steps"] += 1
+        return out_toks
+
+    # --------------------------------------------------------- cascade round
+    def _slot_cascade_plan(self, b: int):
+        """Eq. 5 routing + budget split for one slot: returns
+        ``(expansions, use_rescore, alpha_eff, rescorer_alphas)``. A slot
+        whose trackers say the cascade doesn't pay collapses to single-level
+        drafting (no rescores) or to PLD-only (no neural work at all)."""
+        bank = self.bank
+        L = len(bank)
+        alphas = [
+            self.acceptance.alpha(bank.slot_key(i, b), default=bank.alpha_prior(i))
+            for i in range(L)
+        ]
+        cs = [
+            max(self.costs.c_hat(bank.cost_key(i), default=bank.c_prior(i)), 1e-3)
+            for i in range(L - 1)
+        ] + [max(self.costs.c_hat("cascade_draft", default=bank.c_prior(L - 1)), 1e-3)]
+        alpha_eff = float(np.prod(alphas))
+        # warm-up counts whichever keys this slot's rounds actually feed:
+        # rescored rounds observe slot_key(0), single-level rounds (the only
+        # kind a 1-level hierarchy has) observe direct_key
+        warm = (self.acceptance.counts(bank.slot_key(0, b))
+                + self.acceptance.counts(bank.direct_key(b)))
+        if not self.adaptive or warm < self.min_obs:
+            return self.tree_expansions, L > 1, alpha_eff, alphas[: L - 1]
+        a_dir = self.acceptance.alpha(
+            bank.direct_key(b), default=bank.direct_prior()
+        )
+        exp, use_rescore = best_cascade_plan(
+            alphas, cs, a_dir, self.tree_expansions, self.t_min
+        )
+        use_rescore = use_rescore and L > 1
+        if not use_rescore:
+            # single-level rounds are priced (and observed) by the direct
+            # tracker — the scan's stop rule must use the same alpha the
+            # plan chose the budget with, not the stale compositional prior
+            alpha_eff = a_dir
+        return exp, use_rescore, alpha_eff, alphas[: L - 1]
+
+    def _step_cascade(self) -> Dict[int, List[int]]:
+        """One multi-level cascade round for the whole batch (Alg. 1 + §4.1
+        hierarchy, fully batched): PLD-seeded trees, ONE drafting scan by
+        the cheapest bank level, ONE intermediate-verify dispatch per
+        stronger level (skipped when no slot is routed through it), ONE
+        fused target verify + commit. Returns accepted tokens per slot."""
+        bank = self.bank
+        L = len(bank)
+        chains, have = self._pld_chains()
+        exp_b = np.zeros(self.B, np.int32)
+        use_rescore = np.zeros(self.B, bool)
+        alpha_eff = np.full(self.B, 0.5, np.float32)
+        resc_alphas = np.full((max(L - 1, 1), self.B), 0.5, np.float32)
+        for b in range(self.B):
+            if not self.live[b]:
+                continue
+            exp_b[b], use_rescore[b], alpha_eff[b], r_alphas = (
+                self._slot_cascade_plan(b)
+            )
+            for i, a in enumerate(r_alphas):
+                resc_alphas[i, b] = a
+        seed = tree_seed_arrays(
+            self.pending.astype(np.int32), chains, have, self.tree_bucket,
+            pld_alpha=bank.pld.prior_alpha,
+        )
+        d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count = (
+            jnp.asarray(a) for a in seed
+        )
+        first_neural = jnp.full((self.B,), -1, jnp.int32)
+        expansions = int(exp_b.max(initial=0))
+        c_draft = self.costs.c_hat("cascade_draft", default=bank.c_prior(L - 1))
+        if expansions > 0:
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(self._casc_draft_fn(expansions)(
+                bank.drafter.params, self.cache,
+                d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                jnp.asarray(exp_b), jnp.asarray(alpha_eff),
+                jnp.asarray(max(c_draft, 1e-3), jnp.float32),
+                jnp.asarray(self.t_min, jnp.float32),
+                self._level_gates[bank.drafter.index],
+            ))
+            dt = time.perf_counter() - t0
+            (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+             first_neural) = out
+            self.stats["draft_dispatches"] += 1
+            self.stats["draft_time"] += dt
+            self.stats["drafted_tokens"] += int(
+                np.clip(np.asarray(d_count) - have - 1, 0, None).sum()
+            )
+            self.costs.observe("cascade_draft", dt, tokens=expansions)
+
+        # vertical rescores: just-above-drafter first, strongest level last,
+        # each ONE jitted dispatch; the probe chain carries each level's
+        # first own prediction to the next level's Eq. 4 judgement
+        probe = first_neural
+        level_node = np.full(self.B, -1, np.int32)
+        if use_rescore.any():
+            apply = jnp.asarray(use_rescore & self.live)
+            for lvl in bank.rescorers:
+                r = lvl.index
+                t0 = time.perf_counter()
+                out = jax.block_until_ready(self._rescore_fn(r)(
+                    lvl.params, self.cache,
+                    d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                    probe, apply, jnp.asarray(resc_alphas[r]),
+                    self._level_gates[r],
+                ))
+                dt = time.perf_counter() - t0
+                (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                 lvl_node_d, probe_ok, probe_valid) = out
+                self.stats["rescore_dispatches"] += 1
+                self.stats["rescore_time"] += dt
+                self.costs.observe(bank.cost_key(r), dt, tokens=1)
+                # Eq. 4: this level's verdict on level r+1's first token
+                pv, pk = np.asarray(probe_valid), np.asarray(probe_ok)
+                for b in range(self.B):
+                    if pv[b]:
+                        self.acceptance.observe(
+                            bank.slot_key(r + 1, b), bool(pk[b])
+                        )
+                probe = lvl_node_d
+            level_node = np.asarray(probe)
+
+        t0 = time.perf_counter()
+        new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
+            self.params, self.cache,
+            d_tokens, d_parents, d_depth, d_mask, d_count,
+            jnp.asarray(self.live),
+        ))
+        dt = time.perf_counter() - t0
+        self.cache = new_cache
+        self.stats["target_calls"] += 1
+        self.stats["verify_time"] += dt
+        self.costs.observe_target(dt, tokens=1)
+
+        tokens_h = np.asarray(d_tokens)
+        parents_h = np.asarray(d_parents)
+        first_h = np.asarray(first_neural)
+        path, n_acc, bonus = np.asarray(path), np.asarray(n_acc), np.asarray(bonus)
+        out_toks: Dict[int, List[int]] = {}
+        for b in range(self.B):
+            if not self.live[b]:
+                continue
+            nodes = path[b, : n_acc[b]]
+            acc = [int(tokens_h[b, i]) for i in nodes]
+            self.contexts[b].extend(acc)
+            out_toks[b] = acc
+            self.stats["tokens"] += len(acc)
+            node_set = {int(i) for i in nodes}
+            # Eq. 4, target-facing (parent-accepted rule): on cascade
+            # rounds the observation point is the STRONGEST level's own
+            # node; on single-level rounds it is the drafter's first
+            # prediction, priced under the slot's direct tracker
+            if use_rescore[b]:
+                fn = int(level_node[b])
+                if fn >= 0 and int(parents_h[b, fn]) in node_set:
+                    self.acceptance.observe(
+                        bank.slot_key(0, b), fn in node_set
+                    )
+            else:
+                fn = int(first_h[b])
+                if fn >= 0 and int(parents_h[b, fn]) in node_set:
+                    self.acceptance.observe(bank.direct_key(b), fn in node_set)
+                    if L == 1:
+                        # a 1-level bank's direct acceptance IS its
+                        # target-facing level alpha — keep the plan's
+                        # cascade leg priced too
+                        self.acceptance.observe(
+                            bank.slot_key(0, b), fn in node_set
+                        )
         self.pending = np.where(self.live, bonus.astype(np.int64), self.pending)
         self.stats["steps"] += 1
         return out_toks

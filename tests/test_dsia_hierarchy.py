@@ -1,0 +1,86 @@
+"""§4.1 hierarchy construction: ``dsia.build_hierarchy`` across all four
+modes (cost monotonicity, PLD bottoming) and the layer-sparsity gate
+invariants the cascade bank depends on (boundary layers, exact skip count)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.dsia import (
+    DraftSpec,
+    PLD_SPEC,
+    build_hierarchy,
+    layer_sparsity,
+)
+
+CFG = get_config("vicuna-7b").reduced()
+MODES = ("scaling", "mixing", "replacing", "early_exit")
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_hierarchy_cost_monotone_and_pld_bottom(mode):
+    """Every hierarchy is ordered strongest -> cheapest: prior_c is
+    non-increasing down the levels, and the bottom is the retrieval PLD."""
+    h = build_hierarchy(CFG, mode)
+    assert len(h) >= 3                      # >= 2 executable levels + PLD
+    assert h[-1] is PLD_SPEC and h[-1].kind == "retrieval"
+    cs = [s.prior_c for s in h]
+    assert cs == sorted(cs, reverse=True), f"{mode}: prior_c not monotone {cs}"
+    alphas = [s.prior_alpha for s in h[:-1]]
+    assert alphas == sorted(alphas, reverse=True), (
+        f"{mode}: prior_alpha not monotone {alphas}"
+    )
+    for s in h[:-1]:
+        assert s.kind == "neural"
+
+
+def test_hierarchy_unknown_mode():
+    with pytest.raises(ValueError, match="unknown hierarchy mode"):
+        build_hierarchy(CFG, "nope")
+
+
+def test_mixing_has_sparsity_and_int8_levels():
+    """The default cascade hierarchy carries both DSIA families: a pure
+    layer-sparsity level and an int8 activation-quant level."""
+    h = build_hierarchy(CFG, "mixing")
+    assert any(s.gates is not None and s.quantize is None for s in h[:-1])
+    assert any(s.quantize == "int8" for s in h[:-1])
+
+
+@pytest.mark.parametrize("num_layers", (3, 4, 8, 12, 17, 32))
+@pytest.mark.parametrize("sparsity", (0.0, 0.2, 0.4, 0.5, 0.6, 0.8, 0.95))
+def test_layer_sparsity_exact_skip_and_boundaries(num_layers, sparsity):
+    """``layer_sparsity`` honors the EXACT requested skip count (the
+    collision-fill loop tops up any rounding-induced duplicates) and always
+    keeps the boundary layers (SWIFT: embedding lift-off + pre-head)."""
+    cfg = dataclasses.replace(CFG, num_layers=num_layers)
+    spec = layer_sparsity(cfg, sparsity)
+    gates = np.asarray(spec.gates, np.int32)
+    n_skip = min(int(round(num_layers * sparsity)), max(num_layers - 2, 0))
+    assert len(gates) == num_layers
+    assert int((gates == 0).sum()) == n_skip
+    assert gates[0] == 1 and gates[-1] == 1
+    assert spec.n_active_layers == num_layers - n_skip
+
+
+def test_prior_alpha_given_is_conditional_and_clipped():
+    """Level-to-level cold-start prior (App. D): the ratio of the two
+    target-calibrated priors, clipped to [own prior, 0.98)."""
+    strong = DraftSpec(name="s", prior_alpha=0.8)
+    cheap = DraftSpec(name="c", prior_alpha=0.4)
+    assert cheap.prior_alpha_given(strong) == pytest.approx(0.5)
+    # a cheap draft is accepted by a judge at least as often as by the target
+    assert cheap.prior_alpha_given(DraftSpec(name="x", prior_alpha=0.99)) >= 0.4
+    # near-equal levels clip below 1
+    assert cheap.prior_alpha_given(DraftSpec(name="y", prior_alpha=0.4)) <= 0.98
+
+
+def test_unsupported_by_gates_only_fields():
+    assert layer_sparsity(CFG, 0.5).unsupported_by_gates_only() == ()
+    from repro.core.dsia import activation_quant, streaming_attention
+
+    q = activation_quant(CFG, 8)
+    assert any("quantize" in f for f in q.unsupported_by_gates_only())
+    sa = streaming_attention(CFG, window=64)
+    assert any("attn_override" in f for f in sa.unsupported_by_gates_only())
