@@ -25,6 +25,10 @@ def main() -> None:
                          "drafting-path canary (own model cache, exits "
                          "nonzero on a clear tree-vs-chain regression); "
                          "other suites ignore this flag")
+    ap.add_argument("--trend-out", default=None,
+                    help="append this run's serve-suite metrics to a perf "
+                         "trajectory JSON (CI commits it as BENCH_smoke.json "
+                         "on main) — written even when a canary trips")
     args = ap.parse_args()
 
     import ablation_dytc
@@ -63,6 +67,15 @@ def main() -> None:
         print(f"### {name} done in {time.time()-t0:.1f}s")
     with open(os.path.join(args.out, "bench.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
+    if args.trend_out and "serve" in results:
+        import trend
+
+        # trajectory entries record canary failures too — a regression is
+        # exactly the point a perf history must not lose. Guarded on the
+        # serve suite: the trajectory tracks serve metrics only.
+        trend.append_entry(args.trend_out, json.loads(json.dumps(results, default=float)))
+    elif args.trend_out:
+        print("trend-out skipped: serve suite did not run")
     if canary is not None:
         raise canary
 

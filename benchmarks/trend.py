@@ -1,0 +1,143 @@
+"""Perf-trajectory helpers for the serve smoke benchmark (stdlib-only).
+
+Two jobs:
+
+  - ``append_entry(path, results)`` — called by ``benchmarks/run.py
+    --trend-out``: appends one entry (commit, UTC time, per-variant
+    tokens/step + rounds/s) to a trajectory JSON. CI runs this on every
+    bench-smoke job and commits the file as ``BENCH_smoke.json`` on pushes
+    to main — the canonical perf history of the drafting path.
+  - CLI compare — called by the CI ``bench-trend`` step: renders a
+    markdown table comparing the previous main run's ``bench.json``
+    against the current one (tokens/step and rounds/s with deltas) into
+    ``$GITHUB_STEP_SUMMARY``.
+
+Usage:
+  python benchmarks/trend.py --cur results/bench_smoke/bench.json \
+      [--prev prev_bench/bench.json] [--summary "$GITHUB_STEP_SUMMARY"]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import time
+
+
+def _commit() -> str:
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], text=True,
+            stderr=subprocess.DEVNULL,
+        ).strip()
+    except Exception:
+        return "unknown"
+
+
+def serve_metrics(results: dict) -> dict:
+    """Extract {variant: {tokens_per_step, us_per_round, rounds_per_s}}
+    from a bench.json dict (or its serve-suite slice)."""
+    serve = results.get("serve", results)
+    out = {}
+    if not isinstance(serve, dict):
+        return out
+    for name, r in serve.items():
+        # a serve variant carries BOTH keys — other suites' sub-dicts
+        # (table1, fig3, ...) must never be mislabeled as serve rows
+        if isinstance(r, dict) and "us_per_round" in r and "tokens_per_step" in r:
+            us = max(float(r["us_per_round"]), 1e-9)
+            out[name] = {
+                "tokens_per_step": round(float(r["tokens_per_step"]), 4),
+                "us_per_round": round(us, 1),
+                "rounds_per_s": round(1e6 / us, 3),
+            }
+    return out
+
+
+def append_entry(path: str, results: dict) -> dict:
+    """Append this run's serve metrics to the trajectory file at ``path``."""
+    traj = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                traj = json.load(f)
+        except Exception:
+            pass
+    traj.setdefault("entries", [])
+    entry = {
+        "commit": _commit(),
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "serve": serve_metrics(results),
+    }
+    canary = results.get("serve", {})
+    if isinstance(canary, dict) and canary.get("canary_failed"):
+        entry["canary_failed"] = str(canary["canary_failed"])
+    traj["entries"].append(entry)
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=1)
+        f.write("\n")
+    return entry
+
+
+def compare_table(prev: dict | None, cur: dict) -> str:
+    """Markdown table: previous-main vs current serve metrics with deltas."""
+    prev_m = serve_metrics(prev) if prev else {}
+    cur_m = serve_metrics(cur)
+    lines = [
+        "### bench-smoke perf trend (serve suite)",
+        "",
+        "| variant | tokens/step | rounds/s |",
+        "|---|---|---|",
+    ]
+
+    def cell(p, c, key, fmt):
+        if p is None or key not in p:
+            return fmt.format(c[key])
+        delta = (c[key] - p[key]) / max(abs(p[key]), 1e-9) * 100
+        return f"{fmt.format(p[key])} → {fmt.format(c[key])} ({delta:+.1f}%)"
+
+    for name, c in cur_m.items():
+        p = prev_m.get(name)
+        lines.append(
+            f"| {name} | {cell(p, c, 'tokens_per_step', '{:.3f}')} "
+            f"| {cell(p, c, 'rounds_per_s', '{:.2f}')} |"
+        )
+    if not cur_m:
+        lines.append("| _no serve metrics in current bench.json_ | | |")
+    serve = cur.get("serve", cur)
+    if isinstance(serve, dict) and serve.get("canary_failed"):
+        lines += ["", f"⚠️ smoke canary tripped: `{serve['canary_failed']}`"]
+    if not prev_m:
+        lines += ["", "_no previous main artifact — deltas omitted_"]
+    return "\n".join(lines) + "\n"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cur", required=True, help="current bench.json")
+    ap.add_argument("--prev", default="", help="previous main bench.json ('' = none)")
+    ap.add_argument("--summary", default="", help="file to append the markdown table to")
+    args = ap.parse_args()
+
+    with open(args.cur) as f:
+        cur = json.load(f)
+    prev = None
+    if args.prev and os.path.exists(args.prev):
+        try:
+            with open(args.prev) as f:
+                prev = json.load(f)
+        except Exception:
+            prev = None
+    table = compare_table(prev, cur)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table)
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

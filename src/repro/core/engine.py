@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import ModelConfig
+from repro.config.base import BlockKind, ModelConfig
 from repro.core.acceptance import AcceptanceTracker
 from repro.core.dsia import DraftSpec
 from repro.core.latency import CostTracker
@@ -49,6 +49,28 @@ def fake_quant_int8(params: dict) -> dict:
     return jax.tree.map(q, params)
 
 
+DRAFT_KV_MODES = ("recompute", "carry")
+
+
+def _check_draft_kv(cfg: ModelConfig, draft_kv: str, who: str) -> None:
+    if draft_kv not in DRAFT_KV_MODES:
+        raise ValueError(
+            f"unknown draft_kv {draft_kv!r}; pick one of {DRAFT_KV_MODES}"
+        )
+    if draft_kv == "carry" and (
+        cfg.num_codebooks
+        or any(
+            cfg.block_kind(i) is not BlockKind.ATTENTION
+            for i in range(cfg.num_layers)
+        )
+    ):
+        raise ValueError(
+            f"{who}: draft_kv='carry' requires an attention-only text stack "
+            "— SSM per-step states are cumulative (not row-scatterable) and "
+            "codebook tokens are not scalar; use draft_kv='recompute'"
+        )
+
+
 def chain_draft_scan(
     cfg: ModelConfig,
     steps: int,                       # static scan trip count (<= k)
@@ -62,44 +84,94 @@ def chain_draft_scan(
     *,
     quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
+    draft_kv: str = "recompute",      # "recompute" | "carry" (static)
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused k-step neural chain drafting: one ``lax.scan`` over draft steps.
 
-    Each step re-decodes the fixed (B, k+1) block ``[pending, chain]`` under
-    a causal tree mask — earlier draft tokens are visible to later positions
-    through the staged-KV block path (the same mechanism verification uses),
-    so the committed cache is READ-ONLY here: no scratch commits, no cache
-    copy, and the whole loop is a single dispatch per proposal round instead
-    of ``k`` host-synchronized decode calls. Step ``j`` writes the argmax at
-    position ``j`` into chain position ``j`` only where ``have <= j <
-    limit``; PLD-prefilled positions are never overwritten, and slots past
-    their adaptive ``limit`` stop contributing draft tokens. Unfilled tail
-    positions hold stale tokens during the scan — the causal mask keeps them
-    invisible to every filled position.
+    Step ``j`` writes the draft argmax at position ``j`` into chain position
+    ``j`` only where ``have <= j < limit``; PLD-prefilled positions are never
+    overwritten, and slots past their adaptive ``limit`` stop contributing
+    draft tokens. Unfilled tail positions hold stale tokens during the scan
+    — the causal mask keeps them invisible to every filled position. The
+    committed cache is READ-ONLY either way: no scratch commits, no cache
+    copy, one dispatch per proposal round instead of ``k`` host-synchronized
+    decode calls, and losslessness is untouched.
 
-    The block recompute costs O(k^2) token-forwards per round; for chain
-    drafting at the paper's k <= 5 that is cheaper on every backend we run
-    than the O(k) state-carrying alternative (``M.decode_commit_token``),
-    which must functionally copy the cache into the scan carry. Drafts never
-    write the real cache either way, so losslessness is untouched.
+    ``draft_kv`` picks how draft steps see each other:
+
+      - ``"recompute"`` — each step re-decodes the fixed (B, k+1) block
+        ``[pending, chain]`` under a causal tree mask (the same staged-KV
+        block mechanism verification uses). O(k^2) token-forwards per round;
+        at the paper's k <= 5 the padded block is MXU-absorbed on TPU, and
+        this is the only mode that supports SSM stacks (their per-step
+        states are recomputed inside the block, never carried).
+      - ``"carry"`` — ONE initial (B, k+1) block decode fills carried
+        staged-KV buffers and an argmax table, then each step decodes only
+        the single appended token against [committed cache ++ carried
+        staged KV], scattering its K/V back into the buffers. O(k)
+        token-forwards per round; attention-only stacks.
 
     Returns (chains, have) with ``have = max(have, min(limit, steps))``.
     """
+    _check_draft_kv(cfg, draft_kv, "chain_draft_scan")
     B, K = chains.shape
     toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, K+1)
     mask = jnp.tril(jnp.ones((K + 1, K + 1), bool))
 
-    def body(toks, j):
-        logits, _ = M.decode_step(
-            cfg, params, cache, toks, gates=gates, tree_mask=mask,
-            quantize=quantize, attn_override=attn_override,
-        )
-        nxt = jnp.argmax(logits, -1).astype(toks.dtype)          # (B, K+1)
-        fill = (have <= j) & (j < limit)
-        col = jnp.where(fill, nxt[:, j], toks[:, j + 1])
-        return toks.at[:, j + 1].set(col), None
+    if draft_kv == "recompute":
+        def body(toks, j):
+            logits, _ = M.decode_step(
+                cfg, params, cache, toks, gates=gates, tree_mask=mask,
+                quantize=quantize, attn_override=attn_override,
+            )
+            nxt = jnp.argmax(logits, -1).astype(toks.dtype)      # (B, K+1)
+            fill = (have <= j) & (j < limit)
+            col = jnp.where(fill, nxt[:, j], toks[:, j + 1])
+            return toks.at[:, j + 1].set(col), None
 
-    toks, _ = jax.lax.scan(body, toks, jnp.arange(steps, dtype=jnp.int32))
+        toks, _ = jax.lax.scan(body, toks, jnp.arange(steps, dtype=jnp.int32))
+        have = jnp.maximum(have, jnp.minimum(limit, jnp.int32(steps)))
+        return toks[:, 1:], have
+
+    # --- carry: one block decode seeds the buffers, then 1-token steps
+    base = cache["pos"]                                          # (B,)
+    col_ids = jnp.arange(K + 1, dtype=jnp.int32)
+    logits0, staged0 = M.decode_step(
+        cfg, params, cache, toks, gates=gates, tree_mask=mask,
+        quantize=quantize, attn_override=attn_override,
+    )
+    nxt_buf = jnp.argmax(logits0, -1).astype(toks.dtype)         # (B, K+1)
+
+    def body_carry(carry, j):
+        toks, nxt_buf, staged = carry
+        fill = (have <= j) & (j < limit)
+        col = jnp.where(fill, nxt_buf[:, j], toks[:, j + 1])
+        toks = toks.at[:, j + 1].set(col)
+        # decode ONLY the appended token; staged rows 0..j are final for
+        # every slot by step j (PLD rows from the seed decode, drafted rows
+        # re-staged by their own step), so causal row visibility is exact
+        smask = jnp.broadcast_to(
+            (col_ids[None, None, :] <= j), (B, 1, K + 1)
+        )
+        logits1, st1 = M.decode_step(
+            cfg, params, cache, toks[:, j + 1][:, None], gates=gates,
+            q_pos=(base + j + 1)[:, None],
+            staged_kv=staged, staged_pos=base[:, None] + col_ids[None],
+            staged_mask=smask, quantize=quantize, attn_override=attn_override,
+        )
+        nxt_buf = nxt_buf.at[:, j + 1].set(
+            jnp.argmax(logits1[:, 0], -1).astype(toks.dtype)
+        )
+        staged = jax.tree.map(
+            lambda buf, st: buf.at[:, :, j + 1].set(st[:, :, 0].astype(buf.dtype)),
+            staged, st1,
+        )
+        return (toks, nxt_buf, staged), None
+
+    (toks, _, _), _ = jax.lax.scan(
+        body_carry, (toks, nxt_buf, staged0),
+        jnp.arange(steps, dtype=jnp.int32),
+    )
     have = jnp.maximum(have, jnp.minimum(limit, jnp.int32(steps)))
     return toks[:, 1:], have
 
@@ -125,13 +197,13 @@ def tree_draft_scan(
     top_p: float = 0.3,
     quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
+    draft_kv: str = "recompute",      # "recompute" | "carry" (static)
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused DyTC tree growth: one ``lax.scan`` over expansion steps (§4.2).
 
     The batched, on-device analogue of ``DyTCScheduler.build_tree``. Each
-    scan step re-decodes the padded (B, N) node block under the dense
-    ancestor-closure mask (per-slot (N, N) — the same mechanism verification
-    uses; the committed cache stays READ-ONLY), then per slot:
+    scan step obtains the draft's next-token distribution for the padded
+    (B, N) node block (the committed cache stays READ-ONLY), then per slot:
 
       1. picks the active node with the highest accumulated P_acc with a
          ``jnp.argmax`` over the node axis (Alg. 1 line 5 — no host loop),
@@ -151,19 +223,32 @@ def tree_draft_scan(
     Slots past their per-slot ``limit`` (the Eq. 5 budget chosen by the
     server from its acceptance/cost trackers) and slots whose tree bucket
     is full stop growing; their carries pass through unchanged, keeping
-    every shape jit-stable at the ``TREE_BUCKETS`` padding. Like
-    ``chain_draft_scan``, each step re-decodes the whole padded block
-    (O(E*N) node-forwards per round) instead of carrying staged KV in the
-    scan — dispatch-free and cache-copy-free, and the MXU absorbs the
-    padded block on TPU; an O(E*top_k) staged-KV carry is a possible
-    future optimization for large buckets. Unused node
+    every shape jit-stable at the ``TREE_BUCKETS`` padding. Unused node
     slots hold stale tokens — their self-only mask rows keep them invisible
     to every real node, exactly as host-side ``DraftTree.flatten`` pads.
+
+    ``draft_kv`` picks the drafting cost model:
+
+      - ``"recompute"`` — each step re-decodes the whole padded block under
+        the dense ancestor-closure mask (the same mechanism verification
+        uses): O(E*N) node-forwards per round. Dispatch-free and
+        buffer-free; the MXU absorbs the padded block on TPU at small N.
+      - ``"carry"`` — ONE seed-block decode fills carried staged-KV buffers
+        plus a per-node top-k candidate table, then each expansion step
+        decodes only its <= ``top_k`` appended candidates against
+        [committed cache ++ carried staged KV] (ancestors via the carried
+        buffers, self via the new block, siblings mutually invisible):
+        O(N + E*top_k) node-forwards per round — the mode that makes tree
+        buckets past N=32 pay. A node's logits depend only on its ancestor
+        closure, which never changes after creation, so the cached
+        candidates equal what recompute re-derives each step and the two
+        modes are token-identical (tests/test_draft_kv_carry.py).
 
     Returns (tokens, parents, depth, p_acc, mask, count, first_neural)
     where ``first_neural[b]`` is the node index carrying the slot's first
     neural top-1 prediction (-1 if none) — the Eq. 4 observation point.
     """
+    _check_draft_kv(cfg, draft_kv, "tree_draft_scan")
     B, N = tokens.shape
     b_idx = jnp.arange(B)
     slot_j = jnp.arange(N)
@@ -171,15 +256,13 @@ def tree_draft_scan(
     first_neural = jnp.full((B,), -1, jnp.int32)
     alpha = alpha.astype(jnp.float32)
     rate = alpha / jnp.maximum(c.astype(jnp.float32), 1e-6)
+    # invariant across expansion steps — read ONCE outside the scan body
+    # (drafting never writes the committed cache, so ``pos`` cannot move;
+    # tests assert it is untouched after a drafting round)
+    base = cache["pos"][:, None]                       # (B, 1)
 
-    def body(carry, e):
-        tokens, parents, depth, p_acc, mask, count, active, first_neural = carry
-        qpos = cache["pos"][:, None] + depth
-        logits, _ = M.decode_step(
-            cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos,
-            quantize=quantize, attn_override=attn_override,
-        )
-        # Alg. 1 line 5: best active node by accumulated P_acc
+    def _select(p_acc, active, e):
+        """Alg. 1 line 5 + stop rule; returns (leaf, leaf_p, grow, active)."""
         score = jnp.where(active, p_acc, -jnp.inf)
         leaf = jnp.argmax(score, axis=1).astype(jnp.int32)           # (B,)
         valid = jnp.any(active, axis=1) & (e < limit)
@@ -190,11 +273,16 @@ def tree_draft_scan(
         active = active.at[b_idx, jnp.where(valid, leaf, N)].set(
             False, mode="drop"
         )
-        lg = jnp.take_along_axis(logits, leaf[:, None, None], axis=1)[:, 0]
-        probs = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)      # (B, V)
-        top_vals, top_idx = jax.lax.top_k(probs, top_k)
+        return leaf, leaf_p, grow, active
+
+    def _append(state, grow, leaf, leaf_p, top_vals, top_idx):
+        """Expansion bookkeeping — shared VERBATIM by both draft_kv modes,
+        which is what makes carry-mode parity with recompute exact: only
+        the source of (top_vals, top_idx) differs between them."""
+        tokens, parents, depth, p_acc, mask, count, active, first_neural = state
         parent_row = jnp.take_along_axis(mask, leaf[:, None, None], axis=1)[:, 0]
         parent_depth = jnp.take_along_axis(depth, leaf[:, None], 1)[:, 0]
+        idxs = []
         for r in range(top_k):   # kept candidates land contiguously at count
             tok_r = top_idx[:, r].astype(jnp.int32)
             # dedup: an existing same-token child of this leaf (PLD seed or
@@ -237,12 +325,89 @@ def tree_draft_scan(
                     (first_neural < 0) & (outcome < N), outcome, first_neural
                 )
             count = count + keep.astype(jnp.int32)
-        return (tokens, parents, depth, p_acc, mask, count, active, first_neural), None
+            idxs.append(idx)
+        state = (tokens, parents, depth, p_acc, mask, count, active, first_neural)
+        return state, idxs, parent_row, parent_depth
+
+    if draft_kv == "recompute":
+        def body(carry, e):
+            tokens, parents, depth, p_acc, mask, count, active, first_neural = carry
+            qpos = base + depth
+            logits, _ = M.decode_step(
+                cfg, params, cache, tokens, gates=gates, tree_mask=mask, q_pos=qpos,
+                quantize=quantize, attn_override=attn_override,
+            )
+            leaf, leaf_p, grow, active = _select(p_acc, active, e)
+            lg = jnp.take_along_axis(logits, leaf[:, None, None], axis=1)[:, 0]
+            probs = jax.nn.softmax(lg.astype(jnp.float32), axis=-1)  # (B, V)
+            top_vals, top_idx = jax.lax.top_k(probs, top_k)
+            state = (tokens, parents, depth, p_acc, mask, count, active, first_neural)
+            state, _, _, _ = _append(state, grow, leaf, leaf_p, top_vals, top_idx)
+            return state, None
+
+        carry = (tokens, parents, depth, p_acc.astype(jnp.float32), mask, count,
+                 active, first_neural)
+        carry, _ = jax.lax.scan(body, carry, jnp.arange(expansions, dtype=jnp.int32))
+        tokens, parents, depth, p_acc, mask, count, _, first_neural = carry
+        return tokens, parents, depth, p_acc, mask, count, first_neural
+
+    # --- carry: seed decode fills the buffers + per-node candidate table
+    logits0, staged0 = M.decode_step(
+        cfg, params, cache, tokens, gates=gates, tree_mask=mask,
+        q_pos=base + depth, quantize=quantize, attn_override=attn_override,
+    )
+    probs0 = jax.nn.softmax(logits0.astype(jnp.float32), axis=-1)    # (B, N, V)
+    cand_v, cand_i = jax.lax.top_k(probs0, top_k)                    # (B, N, k)
+    cand_i = cand_i.astype(jnp.int32)
+
+    def body_carry(carry, e):
+        (tokens, parents, depth, p_acc, mask, count, active, first_neural,
+         staged, cand_v, cand_i) = carry
+        leaf, leaf_p, grow, active = _select(p_acc, active, e)
+        top_vals = jnp.take_along_axis(cand_v, leaf[:, None, None], axis=1)[:, 0]
+        top_idx = jnp.take_along_axis(cand_i, leaf[:, None, None], axis=1)[:, 0]
+        state = (tokens, parents, depth, p_acc, mask, count, active, first_neural)
+        state, idxs, parent_row, parent_depth = _append(
+            state, grow, leaf, leaf_p, top_vals, top_idx
+        )
+        tokens, parents, depth, p_acc, mask, count, active, first_neural = state
+        # decode ONLY the <= top_k appended candidates against [committed
+        # cache ++ carried staged KV]: ancestors come from the buffers via
+        # the leaf's closure row, self-visibility from the new block, and
+        # siblings stay mutually invisible (eye mask) — exactly the rows
+        # the recompute block decode exposes to these nodes. Dropped
+        # (duplicate) candidates decode too (jit-stable block); their
+        # buffer writes land on index N and are dropped.
+        qpos_new = jnp.broadcast_to(
+            (base[:, 0] + parent_depth + 1)[:, None], (B, top_k)
+        )
+        svis = jnp.broadcast_to(parent_row[:, None, :], (B, top_k, N))
+        logits_n, st_n = M.decode_step(
+            cfg, params, cache, top_idx.astype(jnp.int32), gates=gates,
+            tree_mask=jnp.eye(top_k, dtype=bool), q_pos=qpos_new,
+            staged_kv=staged, staged_pos=base + depth, staged_mask=svis,
+            quantize=quantize, attn_override=attn_override,
+        )
+        probs_n = jax.nn.softmax(logits_n.astype(jnp.float32), axis=-1)
+        cv_n, ci_n = jax.lax.top_k(probs_n, top_k)       # (B, top_k, top_k)
+        idxs_arr = jnp.stack(idxs, axis=1)               # (B, top_k)
+        staged = jax.tree.map(
+            lambda buf, st: buf.at[:, b_idx[:, None], idxs_arr].set(
+                st.astype(buf.dtype), mode="drop"
+            ),
+            staged, st_n,
+        )
+        cand_v = cand_v.at[b_idx[:, None], idxs_arr].set(cv_n, mode="drop")
+        cand_i = cand_i.at[b_idx[:, None], idxs_arr].set(
+            ci_n.astype(jnp.int32), mode="drop"
+        )
+        return (tokens, parents, depth, p_acc, mask, count, active,
+                first_neural, staged, cand_v, cand_i), None
 
     carry = (tokens, parents, depth, p_acc.astype(jnp.float32), mask, count,
-             active, first_neural)
-    carry, _ = jax.lax.scan(body, carry, jnp.arange(expansions, dtype=jnp.int32))
-    tokens, parents, depth, p_acc, mask, count, _, first_neural = carry
+             active, first_neural, staged0, cand_v, cand_i)
+    carry, _ = jax.lax.scan(body_carry, carry, jnp.arange(expansions, dtype=jnp.int32))
+    tokens, parents, depth, p_acc, mask, count, _, first_neural = carry[:8]
     return tokens, parents, depth, p_acc, mask, count, first_neural
 
 

@@ -11,6 +11,7 @@ low-reuse (PLD weak); math is mid-reuse with long runs.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Iterator, List, Tuple
 
 import numpy as np
@@ -39,7 +40,10 @@ def make_task_prompts(
     task: TaskSpec, n: int, vocab_size: int, seed: int = 0
 ) -> List[np.ndarray]:
     """Prompts whose statistics induce the task's n-gram reuse profile."""
-    rng = np.random.default_rng(seed + hash(task.name) % 10_000)
+    # stable per-task seed: Python's str hash is randomized per process
+    # (PYTHONHASHSEED), which silently made "deterministic" benchmark
+    # streams differ between runs — crc32 is process-invariant
+    rng = np.random.default_rng(seed + zlib.crc32(task.name.encode()) % 10_000)
     prompts = []
     for _ in range(n):
         hot = rng.integers(2, vocab_size, size=task.vocab_hot)

@@ -229,6 +229,10 @@ def decode_attention(
     chunk_kv: int = 4096,
     seq_axes: Optional[Tuple[str, ...]] = None,  # context-parallel partials
     backend: Optional[str] = None,   # "pallas": kernel staged pass (tree verify)
+    k_staged: Optional[jax.Array] = None,    # (B, N_s, KV, hd) carried draft KV
+    v_staged: Optional[jax.Array] = None,    # (B, N_s, KV, hd)
+    staged_pos: Optional[jax.Array] = None,  # (B, N_s) absolute node positions
+    staged_mask: Optional[jax.Array] = None, # (B, T, N_s) bool visibility
 ) -> jax.Array:
     """Attention of T staged tokens over [committed cache ++ staged draft].
 
@@ -239,6 +243,16 @@ def decode_attention(
     every sequence its own tree (the batched ``tree_fused`` serving mode).
     ``backend="pallas"`` routes the dense intra-tree pass through
     ``kernels.tree_attention`` and merges its partials with the cache scan.
+
+    ``k_staged``/``v_staged`` enable the incremental drafting path
+    (``draft_kv="carry"`` in the engine scans): a fixed-size block of
+    PREVIOUSLY staged draft KV that the T new queries attend over in
+    addition to the committed cache and themselves. ``staged_mask`` carries
+    the tree/causal visibility of each staged row to each query (stale rows
+    masked off by the caller), ``staged_pos`` its absolute positions so the
+    window/streaming mask kinds apply exactly as they do to the in-block
+    pass. Like the cache, the staged block is read-only here — the caller
+    scatters the RETURNED new rows into its carried buffers.
 
     ``seq_axes`` switches the cache pass from the sequential chunk-scan to
     flash-decoding split-KV: the seq dim reshapes to (n, S/n) with n = the
@@ -368,6 +382,25 @@ def decode_attention(
             (m0, l0, a0),
             (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kpos, 1, 0)),
         )
+
+    # --- carried staged-KV pass (incremental drafting): merge the carried
+    # draft rows into the cache partials before the in-block pass, so the
+    # final merge below is untouched whichever mode runs
+    if k_staged is not None:
+        if staged_pos is None or staged_mask is None:
+            raise ValueError("k_staged requires staged_pos and staged_mask")
+        s_s = _scores(q, _expand_kv(k_staged, rep))          # (B,H,T,N_s)
+        vis_s = _mask(q_pos, staged_pos, kind, window, sink) & staged_mask
+        s_s = jnp.where(vis_s[:, None], s_s, NEG_INF)
+        m_s = jnp.max(s_s, axis=-1)
+        m_cs = jnp.maximum(m_c, m_s)
+        p_s = jnp.exp(s_s - m_cs[..., None])
+        corr_s = jnp.exp(m_c - m_cs)
+        l_c = l_c * corr_s + jnp.sum(p_s, axis=-1)
+        acc_c = acc_c * corr_s.transpose(0, 2, 1)[..., None] + _out(
+            p_s.astype(q.dtype), _expand_kv(v_staged, rep)
+        )
+        m_c = m_cs
 
     # --- dense pass over the staged draft tokens
     vis = _mask(q_pos, q_pos, kind, window, sink)    # (B, T, T) positional validity

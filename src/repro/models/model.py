@@ -210,6 +210,9 @@ def _attn_layer(
     attn_override: Optional[dict] = None,   # {"kind","window","sink"} DSIA
     seq_axes: Optional[tuple] = None,       # context-parallel decode partials
     attn_backend: Optional[str] = None,     # "pallas": kernel tree-verify pass
+    staged_buf: Optional[dict] = None,      # {"k","v"} carried draft KV block
+    staged_pos: Optional[jax.Array] = None,
+    staged_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[dict]]:
     """Returns (residual delta, staged/new cache entries)."""
     B, T, _ = h.shape
@@ -280,6 +283,10 @@ def _attn_layer(
             chunk_kv=4096,
             seq_axes=None if ring else seq_axes,    # ring caches are small
             backend=attn_backend,
+            k_staged=None if staged_buf is None else staged_buf["k"],
+            v_staged=None if staged_buf is None else staged_buf["v"],
+            staged_pos=staged_pos,
+            staged_mask=staged_mask,
         )
         staged = {"k": k, "v": v}
     out = jnp.einsum("bthk,hkd->btd", o, wo)
@@ -354,6 +361,9 @@ def _run_stack(
     seq_axes: Optional[tuple] = None,
     attn_backend: Optional[str] = None,
     quantize: Optional[str] = None,
+    staged_kv: Optional[Any] = None,        # carried draft-KV segments (decode)
+    staged_pos: Optional[jax.Array] = None,
+    staged_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (hidden, staged_or_new_cache_segments, moe_aux_sum)."""
     segs = layout(cfg)
@@ -372,11 +382,12 @@ def _run_stack(
         )
         p_seg = params["segments"][si]
         c_seg = cache["segments"][si] if cache is not None else None
+        s_seg = staged_kv[si] if staged_kv is not None else None
 
         def body(carry, xs, _unit=seg.unit):
             hh, aux_c = carry
             hh = constrain(hh, data_axis(), None, None)   # keep batch sharded
-            p_u, g_u, c_u = xs
+            p_u, g_u, c_u, s_u = xs
             staged_u = []
             for u, spec in enumerate(_unit):
                 p_l = p_u[u]
@@ -389,6 +400,8 @@ def _run_stack(
                     delta, staged = _attn_layer(
                         cfg, p_l, spec, hh, q_pos, mode, lc, tree_mask, gate,
                         attn_override, seq_axes, attn_backend,
+                        staged_buf=None if s_u is None else s_u[u],
+                        staged_pos=staged_pos, staged_mask=staged_mask,
                     )
                 else:
                     delta, staged = _mamba_layer(cfg, p_l, hh, mode, lc, gate)
@@ -409,12 +422,13 @@ def _run_stack(
                     jax.tree.map(lambda a: a[0], p_seg),
                     g_seg[0],
                     jax.tree.map(lambda a: a[0], c_seg) if c_seg is not None else None,
+                    jax.tree.map(lambda a: a[0], s_seg) if s_seg is not None else None,
                 ),
             )
             staged = jax.tree.map(lambda a: a[None], staged)
         else:
             (h, aux), staged = jax.lax.scan(
-                body_fn, (h, aux), (p_seg, g_seg, c_seg)
+                body_fn, (h, aux), (p_seg, g_seg, c_seg, s_seg)
             )
         staged_segments.append(staged)
     return h, staged_segments, aux
@@ -551,6 +565,9 @@ def decode_step(
     seq_axes: Optional[tuple] = None,        # context-parallel cache partials
     attn_backend: Optional[str] = None,      # "pallas": kernel tree-verify pass
     quantize: Optional[str] = None,          # "int8": W8A8 MLP matmuls (DSIA)
+    staged_kv: Optional[Any] = None,         # carried draft-KV buffers (carry)
+    staged_pos: Optional[jax.Array] = None,  # (B, N_s) staged-row positions
+    staged_mask: Optional[jax.Array] = None, # (B, T, N_s) staged visibility
 ) -> Tuple[jax.Array, Any]:
     """Stage-only decode of T tokens against a frozen cache.
 
@@ -560,6 +577,18 @@ def decode_step(
     ``quantize="int8"`` routes the dense-MLP matmuls through the Pallas
     W8A8 kernel (ActivationQuant DSIA drafting; TPU-compiled — off-TPU
     callers simulate with ``engine.fake_quant_int8`` params instead).
+
+    Incremental mode (``draft_kv="carry"`` in the engine scans): pass
+    ``staged_kv`` — a carried pytree with the same structure a previous
+    ``decode_step`` returned as ``staged`` (per-layer (R, B, N_s, KV, hd)
+    K/V blocks) — plus ``staged_pos``/``staged_mask``. The T new tokens then
+    attend over [committed cache ++ carried staged rows ++ themselves],
+    so an expansion step decodes only its appended tokens instead of
+    re-decoding the whole padded block. The returned ``staged`` holds the
+    NEW rows only; the caller scatters them into its carried buffers at the
+    append indices (write cursor = the tree's ``count``). Attention-only
+    stacks: SSM per-step states are cumulative and cannot be carried
+    row-wise (the engine guards this).
     """
     h = _embed(cfg, params, {"tokens": tokens})
     B, T = tokens.shape[0], tokens.shape[1]
@@ -571,6 +600,7 @@ def decode_step(
         cfg, params, h, mode="decode", cache=cache, gates=gates,
         q_pos=q_pos, tree_mask=tree_mask, attn_override=attn_override,
         seq_axes=seq_axes, attn_backend=attn_backend, quantize=quantize,
+        staged_kv=staged_kv, staged_pos=staged_pos, staged_mask=staged_mask,
     )
     return _head(cfg, params, h), staged
 

@@ -26,6 +26,16 @@ Four proposal modes (see docs/serving.md):
 All modes verify jointly in one target forward and commit per-sequence
 (divergent accepted lengths are supported by the (B,)-pos cache).
 
+Draft-KV execution (``draft_kv=``): the fused drafting scans run either in
+``"recompute"`` (every step re-decodes the whole padded node block — O(E*N)
+node-forwards per round) or ``"carry"`` (staged draft KV is carried in the
+scan and each step decodes only the <= top_k newly appended tokens against
+[committed cache ++ carried staged KV] — O(N + E*top_k)). ``"auto"`` picks
+carry on attention-only stacks and recompute for SSM stacks, whose per-step
+states cannot be carried row-wise. Both modes are token-identical
+(tests/test_draft_kv_carry.py); carry is what lets tree buckets grow past
+N=32 without the per-step block recompute eating the latency headroom.
+
 Fused drafting
 --------------
 The k-step neural chain draft runs as ONE jitted ``lax.scan`` over draft
@@ -184,6 +194,7 @@ class BatchedSpecServer:
         attn_backend: Optional[str] = "auto",    # tree-verify staged pass
         hierarchy: Optional[List[DraftSpec]] = None,  # cascade_fused levels
         int8_exec: str = "auto",       # bank int8 path: auto | kernel | sim
+        draft_kv: str = "auto",        # drafting scans: auto | carry | recompute
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
@@ -192,6 +203,25 @@ class BatchedSpecServer:
             mode = "chain_fused" if fused else "legacy"
         if mode not in PROPOSAL_MODES:
             raise ValueError(f"unknown proposal mode {mode!r}; pick one of {PROPOSAL_MODES}")
+        if draft_kv not in ("auto", "carry", "recompute"):
+            raise ValueError(
+                f"unknown draft_kv {draft_kv!r}; pick auto, carry or recompute"
+            )
+        attention_only = not cfg.num_codebooks and all(
+            cfg.block_kind(i) is BlockKind.ATTENTION
+            for i in range(cfg.num_layers)
+        )
+        if draft_kv == "auto":
+            # carry: O(top_k) new-token decodes per expansion step instead of
+            # the O(N) padded-block recompute — the win everywhere except SSM
+            # stacks, whose per-step states cannot be carried row-wise
+            draft_kv = "carry" if attention_only else "recompute"
+        if draft_kv == "carry" and not attention_only:
+            raise ValueError(
+                "draft_kv='carry' requires an attention-only text stack "
+                "(SSM per-step states are cumulative); use 'recompute'"
+            )
+        self.draft_kv = draft_kv
         if draft_spec is not None:
             if mode == "cascade_fused":
                 raise ValueError(
@@ -361,7 +391,9 @@ class BatchedSpecServer:
     def _draft_fn(self, steps: int):
         fn = self._draft_fns.get(steps)
         if fn is None:
-            fn = jax.jit(functools.partial(chain_draft_scan, self.cfg, steps))
+            fn = jax.jit(functools.partial(
+                chain_draft_scan, self.cfg, steps, draft_kv=self.draft_kv,
+            ))
             self._draft_fns[steps] = fn
         return fn
 
@@ -370,7 +402,7 @@ class BatchedSpecServer:
         if fn is None:
             fn = jax.jit(functools.partial(
                 tree_draft_scan, self.cfg, expansions, self.tree_top_k,
-                top_p=self.tree_top_p,
+                top_p=self.tree_top_p, draft_kv=self.draft_kv,
             ))
             self._tree_draft_fns[expansions] = fn
         return fn
@@ -385,7 +417,7 @@ class BatchedSpecServer:
             fn = jax.jit(functools.partial(
                 tree_draft_scan, self.cfg, expansions, self.tree_top_k,
                 top_p=self.tree_top_p, quantize=drafter.quantize,
-                attn_override=drafter.attn_override,
+                attn_override=drafter.attn_override, draft_kv=self.draft_kv,
             ))
             self._casc_draft_fns[expansions] = fn
         return fn

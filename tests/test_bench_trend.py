@@ -1,0 +1,57 @@
+"""Perf-trajectory tooling (benchmarks/trend.py): append + compare are
+what CI's bench-trend step and the BENCH_smoke.json history run on."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "benchmarks"))
+import trend  # noqa: E402
+
+BENCH = {
+    "serve": {
+        "tree": {"tokens_per_step": 4.714, "us_per_round": 200000.0},
+        "tree_carry_n32": {"tokens_per_step": 4.714, "us_per_round": 180000.0},
+        "tree_accept_ratio": 1.0,           # scalar entries must be skipped
+    }
+}
+
+
+def test_serve_metrics_extracts_variants_only():
+    m = trend.serve_metrics(BENCH)
+    assert set(m) == {"tree", "tree_carry_n32"}
+    assert m["tree"]["rounds_per_s"] == 5.0
+    # accepts the serve slice directly too (artifact-shaped input)
+    assert trend.serve_metrics(BENCH["serve"]) == m
+
+
+def test_append_entry_builds_trajectory(tmp_path):
+    path = str(tmp_path / "BENCH_smoke.json")
+    trend.append_entry(path, BENCH)
+    cur = {"serve": dict(BENCH["serve"], canary_failed="boom")}
+    trend.append_entry(path, cur)
+    with open(path) as f:
+        traj = json.load(f)
+    assert len(traj["entries"]) == 2
+    assert traj["entries"][0]["serve"]["tree"]["tokens_per_step"] == 4.714
+    assert traj["entries"][1]["canary_failed"] == "boom"
+    assert "commit" in traj["entries"][0] and "utc" in traj["entries"][0]
+    # a corrupt trajectory file is replaced, not a crash
+    with open(path, "w") as f:
+        f.write("{not json")
+    trend.append_entry(path, BENCH)
+    with open(path) as f:
+        assert len(json.load(f)["entries"]) == 1
+
+
+def test_compare_table_deltas_and_fallbacks():
+    prev = {"serve": {"tree": {"tokens_per_step": 4.0, "us_per_round": 250000.0}}}
+    table = trend.compare_table(prev, BENCH)
+    assert "| tree |" in table and "(+17.9%)" in table     # 4.0 -> 4.714
+    assert "4.00 → 5.00 (+25.0%)" in table                 # rounds/s
+    # variants absent from prev render without deltas
+    assert "| tree_carry_n32 | 4.714 | 5.56 |" in table
+    # no previous artifact at all
+    assert "deltas omitted" in trend.compare_table(None, BENCH)
+    # canary failures surface in the summary
+    bad = {"serve": dict(BENCH["serve"], canary_failed="ratio 0.8")}
+    assert "canary tripped" in trend.compare_table(None, bad)
