@@ -55,8 +55,9 @@ print(f"throughput: {srv.stats['tokens'] / steps:.2f} accepted tokens/step "
       f"(batch={MAX_BATCH})")
 print(f"dispatches/round: "
       f"{srv.stats['draft_dispatches'] / max(steps, 1):.2f} draft + "
-      f"{srv.stats['rescore_dispatches'] / max(steps, 1):.2f} rescore + "
-      f"1 verify (bounded: one per cascade level + target)")
+      f"{srv.stats['rescore_dispatches'] / max(steps, 1):.2f} rescore "
+      f"(bounded: one per cascade level — the target verify rides the "
+      f"last rescore dispatch)")
 
 # verify losslessness of every completed request
 bad = 0

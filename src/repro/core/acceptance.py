@@ -5,15 +5,63 @@ EMA over a local history window of *first-token* acceptance outcomes:
 
 Estimates for inactive configurations are preserved (Appendix D); cold-start
 uses heuristic priors based on DSIA aggressiveness.
+
+Two implementations with pinned identical semantics:
+
+  - ``AcceptanceTracker`` — host-side, per-config string keys (the split
+    serving rounds and the B=1 engine). The reference implementation.
+  - ``ema_init``/``ema_update`` — the same estimator as per-slot device
+    arrays (alpha + an outcome ring buffer), pure jnp, carried through the
+    single-dispatch serving round so round r+1's Eq. 5 budgets are computed
+    inside round r's executable (tests/test_device_round_parity.py pins the
+    host/device parity).
 """
 from __future__ import annotations
 
 from collections import deque
 from typing import Deque, Dict, Optional
 
+EMA_LAM = 0.7
+EMA_WINDOW = 20
+
+
+def ema_init(batch: int, window: int = EMA_WINDOW, prior: float = 0.5):
+    """Device-array form of a fresh per-slot ``AcceptanceTracker``: returns
+    ``(alpha (B,) f32, hist (B, W) f32, hist_n (B,) i32, hist_ptr (B,) i32)``."""
+    import jax.numpy as jnp
+
+    return (
+        jnp.full((batch,), prior, jnp.float32),
+        jnp.zeros((batch, window), jnp.float32),
+        jnp.zeros((batch,), jnp.int32),
+        jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def ema_update(alpha, hist, hist_n, hist_ptr, outcome, valid, lam: float = EMA_LAM):
+    """One vectorized ``AcceptanceTracker.observe`` over per-slot arrays.
+
+    ``outcome`` (B,) f32 in {0, 1}; slots where ``valid`` is False pass
+    through untouched (no observation this round). The ring buffer holds the
+    last ``W`` outcomes — its masked mean equals the host deque's mean, so
+    the device alpha tracks the host tracker exactly (up to f32)."""
+    import jax.numpy as jnp
+
+    B, W = hist.shape
+    b_idx = jnp.arange(B)
+    hist = hist.at[b_idx, jnp.where(valid, hist_ptr, W)].set(
+        outcome.astype(jnp.float32), mode="drop"
+    )
+    hist_n = jnp.where(valid, jnp.minimum(hist_n + 1, W), hist_n)
+    hist_ptr = jnp.where(valid, (hist_ptr + 1) % W, hist_ptr)
+    live_rows = jnp.arange(W)[None, :] < hist_n[:, None]
+    recent = (hist * live_rows).sum(axis=1) / jnp.maximum(hist_n, 1)
+    alpha = jnp.where(valid, lam * alpha + (1.0 - lam) * recent, alpha)
+    return alpha, hist, hist_n, hist_ptr
+
 
 class AcceptanceTracker:
-    def __init__(self, lam: float = 0.7, window: int = 20, prior: float = 0.5):
+    def __init__(self, lam: float = EMA_LAM, window: int = EMA_WINDOW, prior: float = 0.5):
         self.lam = lam
         self.window = window
         self.prior = prior

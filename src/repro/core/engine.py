@@ -22,11 +22,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import BlockKind, ModelConfig
-from repro.core.acceptance import AcceptanceTracker
+from repro.core import pld as pld_lib
+from repro.core.acceptance import AcceptanceTracker, ema_update
 from repro.core.dsia import DraftSpec
-from repro.core.latency import CostTracker
+from repro.core.latency import (
+    CostTracker,
+    best_chain_length_batched,
+    best_tree_expansions_batched,
+)
 from repro.core.pld import PromptLookup
-from repro.core.tree import DraftTree, bucket_for
+from repro.core.tree import DraftTree, bucket_for, tree_seed_device
 from repro.core import verify as verify_lib
 from repro.models import model as M
 
@@ -50,6 +55,32 @@ def fake_quant_int8(params: dict) -> dict:
 
 
 DRAFT_KV_MODES = ("recompute", "carry")
+
+
+def _bounded_loop(body, init, steps: int, j_max):
+    """Run ``body`` (a ``lax.scan``-style ``(carry, j) -> (carry, None)``)
+    either as a static-trip scan (``j_max is None``) or as a
+    ``lax.while_loop`` bounded by the traced ``j_max`` (clipped to
+    ``steps``). The while form is what lets the single-dispatch round use
+    the SAME per-round trip count the split path computes on host —
+    decided on device, no sync. Iterations past the point where every
+    slot's fill mask is dead are no-ops, so the two forms are
+    token-identical."""
+    if j_max is None:
+        carry, _ = jax.lax.scan(body, init, jnp.arange(steps, dtype=jnp.int32))
+        return carry
+    j_hi = jnp.minimum(j_max.astype(jnp.int32), steps)
+
+    def w_cond(c):
+        return c[1] < j_hi
+
+    def w_body(c):
+        carry, j = c
+        carry, _ = body(carry, j)
+        return carry, j + 1
+
+    carry, _ = jax.lax.while_loop(w_cond, w_body, (init, jnp.int32(0)))
+    return carry
 
 
 def _check_draft_kv(cfg: ModelConfig, draft_kv: str, who: str) -> None:
@@ -85,6 +116,7 @@ def chain_draft_scan(
     quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
     draft_kv: str = "recompute",      # "recompute" | "carry" (static)
+    dynamic_steps: bool = False,      # trip count from (have, limit), on device
 ) -> Tuple[jax.Array, jax.Array]:
     """Fused k-step neural chain drafting: one ``lax.scan`` over draft steps.
 
@@ -111,12 +143,26 @@ def chain_draft_scan(
         staged KV], scattering its K/V back into the buffers. O(k)
         token-forwards per round; attention-only stacks.
 
+    ``dynamic_steps=True`` replaces the static trip count with the exact
+    per-round need ``max_b(limit_b where limit_b > have_b)`` computed on
+    device (a ``lax.while_loop``) — what the split serving path computes on
+    host per round, available to the fused single-dispatch round without a
+    sync. Token-identical to the static scan (the skipped iterations have
+    dead fill masks). Caveat: on CPU XLA a dynamic-trip While runs each
+    iteration noticeably slower than the known-trip scan, so the fused
+    rounds keep the static trip and skip the WHOLE scan via ``lax.cond``
+    when no slot needs neural fill; prefer ``dynamic_steps`` only where
+    the saved iterations beat the While overhead (accelerators).
+
     Returns (chains, have) with ``have = max(have, min(limit, steps))``.
     """
     _check_draft_kv(cfg, draft_kv, "chain_draft_scan")
     B, K = chains.shape
     toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, K+1)
     mask = jnp.tril(jnp.ones((K + 1, K + 1), bool))
+    j_max = (
+        jnp.max(jnp.where(limit > have, limit, 0)) if dynamic_steps else None
+    )
 
     if draft_kv == "recompute":
         def body(toks, j):
@@ -129,7 +175,7 @@ def chain_draft_scan(
             col = jnp.where(fill, nxt[:, j], toks[:, j + 1])
             return toks.at[:, j + 1].set(col), None
 
-        toks, _ = jax.lax.scan(body, toks, jnp.arange(steps, dtype=jnp.int32))
+        toks = _bounded_loop(body, toks, steps, j_max)
         have = jnp.maximum(have, jnp.minimum(limit, jnp.int32(steps)))
         return toks[:, 1:], have
 
@@ -168,10 +214,7 @@ def chain_draft_scan(
         )
         return (toks, nxt_buf, staged), None
 
-    (toks, _, _), _ = jax.lax.scan(
-        body_carry, (toks, nxt_buf, staged0),
-        jnp.arange(steps, dtype=jnp.int32),
-    )
+    toks, _, _ = _bounded_loop(body_carry, (toks, nxt_buf, staged0), steps, j_max)
     have = jnp.maximum(have, jnp.minimum(limit, jnp.int32(steps)))
     return toks[:, 1:], have
 
@@ -198,6 +241,7 @@ def tree_draft_scan(
     quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
     draft_kv: str = "recompute",      # "recompute" | "carry" (static)
+    dynamic_steps: bool = False,      # trip count = max per-slot limit, on device
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused DyTC tree growth: one ``lax.scan`` over expansion steps (§4.2).
 
@@ -254,6 +298,11 @@ def tree_draft_scan(
     slot_j = jnp.arange(N)
     active = slot_j[None, :] < count[:, None]          # every seeded node
     first_neural = jnp.full((B,), -1, jnp.int32)
+    # dynamic trip count: expansion steps past every slot's limit are
+    # complete no-ops (dead select + dropped writes), so stopping at the
+    # max per-slot budget is token-identical — the on-device analogue of
+    # the split path's host-computed `expansions = limits.max()`
+    e_max = jnp.max(limit) if dynamic_steps else None
     alpha = alpha.astype(jnp.float32)
     rate = alpha / jnp.maximum(c.astype(jnp.float32), 1e-6)
     # invariant across expansion steps — read ONCE outside the scan body
@@ -347,7 +396,7 @@ def tree_draft_scan(
 
         carry = (tokens, parents, depth, p_acc.astype(jnp.float32), mask, count,
                  active, first_neural)
-        carry, _ = jax.lax.scan(body, carry, jnp.arange(expansions, dtype=jnp.int32))
+        carry = _bounded_loop(body, carry, expansions, e_max)
         tokens, parents, depth, p_acc, mask, count, _, first_neural = carry
         return tokens, parents, depth, p_acc, mask, count, first_neural
 
@@ -406,7 +455,7 @@ def tree_draft_scan(
 
     carry = (tokens, parents, depth, p_acc.astype(jnp.float32), mask, count,
              active, first_neural, staged0, cand_v, cand_i)
-    carry, _ = jax.lax.scan(body_carry, carry, jnp.arange(expansions, dtype=jnp.int32))
+    carry = _bounded_loop(body_carry, carry, expansions, e_max)
     tokens, parents, depth, p_acc, mask, count, _, first_neural = carry[:8]
     return tokens, parents, depth, p_acc, mask, count, first_neural
 
@@ -558,6 +607,343 @@ def cascade_rescore(
     )
     return (tokens, parents, depth, p_acc, mask, count,
             level_node, probe_ok, probe_valid)
+
+
+def verify_accept_commit(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    pending: jax.Array,               # (B,) int32
+    chains: jax.Array,                # (B, k) int32
+    have: jax.Array,                  # (B,) int32
+    live: jax.Array,                  # (B,) bool
+):
+    """One fused target round for chain proposals: verify [pending, chain]
+    jointly, accept the longest matching prefix per slot (vectorized — no
+    per-slot Python), and commit the accepted path.
+    Returns (cache, nxt, n_chain, new_pending)."""
+    toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, k+1)
+    logits, staged = M.decode_step(cfg, params, cache, toks)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, k+1)
+    B, K = chains.shape
+    ok = (chains == nxt[:, :K]) & (jnp.arange(K)[None] < have[:, None])
+    # accepted chain prefix length: leading run of matches
+    n_chain = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    n_chain = jnp.where(live, n_chain, 0)
+    n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)    # + pending
+    new_pending = jnp.take_along_axis(nxt, n_chain[:, None], axis=1)[:, 0]
+    path_idx = jnp.broadcast_to(
+        jnp.arange(K + 1, dtype=jnp.int32)[None], (B, K + 1)
+    )
+    new_cache = M.commit_cache(cfg, cache, staged, path_idx, n_acc)
+    return new_cache, nxt, n_chain, new_pending
+
+
+def tree_verify_accept_commit(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                # (B, N) int32 padded tree node tokens
+    parents: jax.Array,               # (B, N) int32, -1 at root/unused
+    depth: jax.Array,                 # (B, N) int32
+    mask: jax.Array,                  # (B, N, N) bool ancestor closure
+    count: jax.Array,                 # (B,) int32 real nodes per slot
+    live: jax.Array,                  # (B,) bool
+    *,
+    attn_backend: Optional[str] = None,
+):
+    """One fused target round for tree proposals: decode the whole padded
+    node block jointly under per-slot ancestor-closure masks (the intra-tree
+    attention half routes through ``kernels.tree_attention`` when
+    ``attn_backend="pallas"``), walk the longest target-greedy path per slot
+    with a vectorized tree walk, and commit the accepted path's staged KV.
+    Returns (cache, path_idx (B,N), n_acc (B,), bonus (B,))."""
+    qpos = cache["pos"][:, None] + depth
+    logits, staged = M.decode_step(
+        cfg, params, cache, tokens, tree_mask=mask, q_pos=qpos,
+        attn_backend=attn_backend,
+    )
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, N)
+    path, n_acc, bonus = verify_lib.greedy_accept_tree_batched(
+        tokens, parents, count, nxt
+    )
+    n_acc = jnp.where(live, n_acc, 0).astype(jnp.int32)
+    new_cache = M.commit_cache(cfg, cache, staged, path, n_acc)
+    return new_cache, path, n_acc, bonus
+
+
+def cascade_rescore_verify(
+    cfg: ModelConfig,
+    level_params: dict,
+    target_params: dict,
+    cache: dict,
+    tokens: jax.Array,
+    parents: jax.Array,
+    depth: jax.Array,
+    p_acc: jax.Array,
+    mask: jax.Array,
+    count: jax.Array,
+    probe: jax.Array,
+    apply: jax.Array,
+    alpha: jax.Array,
+    gates: Optional[jax.Array],
+    live: jax.Array,
+    *,
+    quantize: Optional[str] = None,
+    attn_override: Optional[dict] = None,
+    attn_backend: Optional[str] = None,
+):
+    """The cascade's LAST rescore dispatch with the target verify folded in:
+    one jitted call runs the strongest level's ``cascade_rescore`` and then
+    the target's ``tree_verify_accept_commit`` over the rescored tree, so an
+    L-level cascade round is 1 draft + (L-2) rescores + 1 rescore-and-verify
+    dispatch — and the commit scatter can alias a donated cache in place.
+    Returns the rescore outputs followed by (cache, path, n_acc, bonus)."""
+    (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
+     probe_valid) = cascade_rescore(
+        cfg, level_params, cache, tokens, parents, depth, p_acc, mask, count,
+        probe, apply, alpha, gates,
+        quantize=quantize, attn_override=attn_override,
+        attn_backend=attn_backend,
+    )
+    new_cache, path, n_acc, bonus = tree_verify_accept_commit(
+        cfg, target_params, cache, tokens, parents, depth, mask, count, live,
+        attn_backend=attn_backend,
+    )
+    return (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
+            probe_valid, new_cache, path, n_acc, bonus)
+
+
+# ===================================================== single-dispatch rounds
+def _round_prologue(cfg, cache, state, draft_k, max_ngram, min_ngram):
+    """Shared head of the fused rounds: append the pending token to the
+    device context buffer and retrieve PLD proposals for every slot inside
+    the round executable. Returns (ctx, chains, have) with dead slots'
+    proposals zeroed."""
+    B, L = state["ctx"].shape
+    b_idx = jnp.arange(B)
+    n = cache["pos"]
+    live = state["live"]
+    # writing pending at position n IS the commit of this round's first
+    # accepted token (the pending token is always accepted when live), so
+    # the buffer stays consistent whatever the round accepts
+    ctx = state["ctx"].at[b_idx, jnp.where(n < L, n, L)].set(
+        state["pending"].astype(jnp.int32), mode="drop"
+    )
+    chains, have = pld_lib.propose_device(
+        ctx, jnp.minimum(n + 1, L), draft_k,
+        max_ngram=max_ngram, min_ngram=min_ngram,
+    )
+    have = jnp.where(live, have, 0)
+    chains = jnp.where(jnp.arange(draft_k)[None] < have[:, None], chains, 0)
+    return ctx, chains, have
+
+
+def _commit_ctx(ctx, n, acc_tok, n_acc):
+    """Scatter this round's accepted tokens into the context buffer at
+    positions [n, n + n_acc) — the device-side maintenance that keeps the
+    next round's PLD exact without any host contexts."""
+    B, L = ctx.shape
+    T = acc_tok.shape[1]
+    t_ids = jnp.arange(T)
+    dest = jnp.where(
+        t_ids[None, :] < n_acc[:, None], n[:, None] + t_ids[None, :], L
+    )
+    return ctx.at[jnp.arange(B)[:, None], dest].set(acc_tok, mode="drop")
+
+
+def chain_round(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,                      # donated: the commit aliases in place
+    state: dict,                      # donated carried device state (see server)
+    c: jax.Array,                     # () f32 draft cost coefficient
+    gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
+    *,
+    draft_k: int,
+    use_draft: bool,
+    adaptive: bool,
+    min_obs: int,
+    t_min: float,
+    draft_kv: str = "recompute",
+    max_ngram: int = 4,
+    min_ngram: int = 1,
+):
+    """ONE fused, device-resident ``chain_fused`` serving round.
+
+    PLD retrieval over the carried context buffer, Eq. 5 per-slot draft
+    budgets from the carried Eq. 4 EMA state, the k-step neural chain scan,
+    target verification, acceptance, cache + context commit, and the EMA
+    update for round r+1 — all inside a single jitted dispatch, so the host
+    never blocks between rounds (the pipelined server drains the returned
+    ``out`` arrays whenever it chooses to sync).
+
+    ``state`` carries ``pending (B,) i32``, ``live (B,) bool``,
+    ``ctx (B, max_len) i32``, and the Eq. 4 estimator arrays ``alpha``,
+    ``hist``, ``hist_n``, ``hist_ptr`` (see ``acceptance.ema_init``).
+    Returns ``(cache, state, out)`` where ``out`` holds the round's
+    accepted tokens: ``acc (B, k+1)`` (valid prefix ``n_acc``), plus
+    ``pld_have``/``have`` for host-side stats.
+    """
+    state = dict(state)
+    live = state["live"]
+    pending = state["pending"]
+    n = cache["pos"]
+    ctx, chains, have = _round_prologue(
+        cfg, cache, state, draft_k, max_ngram, min_ngram
+    )
+    pld_have = have
+    if use_draft:
+        if adaptive:
+            budget = best_chain_length_batched(
+                state["alpha"], c, draft_k, t_min
+            )
+            limit = jnp.where(state["hist_n"] >= min_obs, budget, draft_k)
+        else:
+            limit = jnp.full(live.shape, draft_k, jnp.int32)
+        limit = jnp.where(live, limit, 0)
+
+        def _draft(ops):
+            ch, hv = ops
+            return chain_draft_scan(
+                cfg, draft_k, params, cache, pending, ch, hv, limit, gates,
+                draft_kv=draft_kv,
+            )
+
+        # runtime skip: rounds where PLD covered every budget (or routing
+        # stopped drafting) pay NO neural draft compute — the economics the
+        # split path gets from its host-computed trip count, decided
+        # entirely on device. (The scan keeps its static trip inside the
+        # taken branch: XLA's known-trip While beats the dynamic-trip form
+        # on CPU — see chain_draft_scan(dynamic_steps=...).)
+        chains, have = jax.lax.cond(
+            jnp.any(limit > have), _draft, lambda ops: ops, (chains, have)
+        )
+    new_cache, nxt, n_chain, new_pending = verify_accept_commit(
+        cfg, params, cache, pending, chains, have, live
+    )
+    n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)
+    acc_tok = jnp.concatenate([pending[:, None], chains], axis=1)
+    state["ctx"] = _commit_ctx(ctx, n, acc_tok, n_acc)
+    state["pending"] = jnp.where(live, new_pending, pending).astype(jnp.int32)
+    # Eq. 4 EMA over the NEURAL drafter: first neural position's outcome,
+    # only when the PLD prefix was fully accepted (parent-accepted rule)
+    obs = live & (have > pld_have) & (n_chain >= pld_have)
+    outcome = (n_chain > pld_have).astype(jnp.float32)
+    (state["alpha"], state["hist"], state["hist_n"],
+     state["hist_ptr"]) = ema_update(
+        state["alpha"], state["hist"], state["hist_n"], state["hist_ptr"],
+        outcome, obs,
+    )
+    out = {
+        "acc": acc_tok, "n_acc": n_acc,
+        "drafted": jnp.maximum(have - pld_have, 0).sum(),
+    }
+    return new_cache, state, out
+
+
+def tree_round(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,                      # donated: the commit aliases in place
+    state: dict,                      # donated carried device state (see server)
+    c: jax.Array,                     # () f32 draft cost coefficient
+    gates: Optional[jax.Array],       # (num_layers,) DSIA layer gates or None
+    *,
+    draft_k: int,
+    expansions: int,
+    top_k: int,
+    top_p: float,
+    bucket: int,
+    pld_alpha: float,
+    use_draft: bool,
+    adaptive: bool,
+    min_obs: int,
+    t_min: float,
+    draft_kv: str = "recompute",
+    attn_backend: Optional[str] = None,
+    max_ngram: int = 4,
+    min_ngram: int = 1,
+):
+    """ONE fused, device-resident ``tree_fused`` (DyTC §4.2) serving round:
+    PLD retrieval + tree seeding + the expansion scan + target verify + the
+    vectorized accepted-path walk + cache/context commit + the Eq. 4 EMA
+    update, all in a single jitted dispatch. Same carried ``state`` contract
+    as ``chain_round``; ``out["acc"]`` holds the accepted path tokens."""
+    state = dict(state)
+    live = state["live"]
+    pending = state["pending"]
+    n = cache["pos"]
+    B = live.shape[0]
+    ctx, chains, have = _round_prologue(
+        cfg, cache, state, draft_k, max_ngram, min_ngram
+    )
+    pld_have = have
+    tokens, parents, depth, p_acc, mask, count = tree_seed_device(
+        pending, chains, have, bucket, pld_alpha
+    )
+    first_neural = jnp.full((B,), -1, jnp.int32)
+    if use_draft and expansions > 0:
+        if adaptive:
+            budget = best_tree_expansions_batched(
+                state["alpha"], c, expansions, t_min
+            )
+            limits = jnp.where(state["hist_n"] >= min_obs, budget, expansions)
+        else:
+            limits = jnp.full((B,), expansions, jnp.int32)
+        limits = jnp.where(live, limits, 0)
+
+        def _grow(ops):
+            tk, pr, dp, pa, mk, ct, fn = ops
+            return tree_draft_scan(
+                cfg, expansions, top_k, params, cache,
+                tk, pr, dp, pa, mk, ct,
+                limits, state["alpha"],
+                jnp.maximum(c.astype(jnp.float32), 1e-3),
+                jnp.asarray(t_min, jnp.float32), gates,
+                top_p=top_p, draft_kv=draft_kv,
+            )
+
+        # runtime skip (see chain_round): PLD-only / routing-stopped rounds
+        # pay no expansion compute inside the same executable
+        tokens, parents, depth, p_acc, mask, count, first_neural = (
+            jax.lax.cond(
+                jnp.any(limits > 0), _grow, lambda ops: ops,
+                (tokens, parents, depth, p_acc, mask, count, first_neural),
+            )
+        )
+    new_cache, path, n_acc, bonus = tree_verify_accept_commit(
+        cfg, params, cache, tokens, parents, depth, mask, count, live,
+        attn_backend=attn_backend,
+    )
+    acc_tok = jnp.take_along_axis(tokens, path, axis=1)          # (B, N)
+    state["ctx"] = _commit_ctx(ctx, n, acc_tok, n_acc)
+    state["pending"] = jnp.where(live, bonus, pending).astype(jnp.int32)
+    # Eq. 4 EMA at the slot's first NEURAL node (parent-accepted rule; the
+    # same bookkeeping the split round does on host after draining)
+    N = tokens.shape[1]
+    t_ids = jnp.arange(N)
+    acc_mask = jnp.zeros((B, N), bool).at[
+        jnp.arange(B)[:, None],
+        jnp.where(t_ids[None, :] < n_acc[:, None], path, N),
+    ].set(True, mode="drop")
+    fn_c = jnp.clip(first_neural, 0, N - 1)
+    fn_parent = jnp.take_along_axis(parents, fn_c[:, None], 1)[:, 0]
+    parent_ok = jnp.take_along_axis(
+        acc_mask, jnp.clip(fn_parent, 0, N - 1)[:, None], 1
+    )[:, 0]
+    obs = live & (first_neural >= 0) & (fn_parent >= 0) & parent_ok
+    outcome = jnp.take_along_axis(acc_mask, fn_c[:, None], 1)[:, 0]
+    (state["alpha"], state["hist"], state["hist_n"],
+     state["hist_ptr"]) = ema_update(
+        state["alpha"], state["hist"], state["hist_n"], state["hist_ptr"],
+        outcome.astype(jnp.float32), obs,
+    )
+    out = {
+        "acc": acc_tok, "n_acc": n_acc,
+        "drafted": jnp.clip(count - pld_have - 1, 0, None).sum(),
+    }
+    return new_cache, state, out
 
 
 class SpecEngine:

@@ -26,6 +26,38 @@ def t_sd(alpha: float, c: float, k: int) -> float:
     return (1.0 - alpha ** (k + 1)) / ((1.0 - alpha) * (c * k + 1.0))
 
 
+def t_sd_grid(alpha, c, k_max: int):
+    """Vectorized ``t_sd`` over slots and chain lengths, jnp.
+
+    ``alpha`` (B,) f32, ``c`` scalar, static ``k_max``: returns a
+    ``(B, k_max + 1)`` grid of T_SD(alpha_b, c, k) for k = 0..k_max —
+    the device form of the per-slot Eq. 5 searches, traced into the
+    single-dispatch serving round (k=0 is plain AR, exactly 1.0)."""
+    import jax.numpy as jnp
+
+    ks = jnp.arange(k_max + 1, dtype=jnp.float32)[None, :]
+    a = alpha.astype(jnp.float32)[:, None]
+    a_safe = jnp.minimum(a, 1.0 - 1e-9)
+    v = (1.0 - a_safe ** (ks + 1.0)) / ((1.0 - a_safe) * (c * ks + 1.0))
+    return jnp.where(a >= 1.0, (ks + 1.0) / (c * ks + 1.0), v)
+
+
+def dytc_objective_grid(alpha, c, k_max: int):
+    """Vectorized ``dytc_step_objective`` with the drafter as its own
+    continuation (alpha_dn = alpha, c_dn = c — the homogeneous-hierarchy
+    specialization ``best_tree_expansions`` searches). Returns a
+    ``(B, k_max)`` grid over k = 1..k_max, jnp."""
+    import jax.numpy as jnp
+
+    ks = jnp.arange(1, k_max + 1, dtype=jnp.float32)[None, :]
+    a = alpha.astype(jnp.float32)[:, None]
+    a_safe = jnp.minimum(a, 1.0 - 1e-9)
+    e_acc = jnp.where(
+        a >= 1.0, ks, a_safe * (1.0 - a_safe ** ks) / (1.0 - a_safe)
+    )
+    return (e_acc + (a_safe ** ks) * a_safe) / (c * ks + c)
+
+
 def expected_accepted(alpha: float, k: int) -> float:
     """E[# accepted draft tokens] = a(1-a^k)/(1-a)."""
     if alpha >= 1.0:

@@ -117,6 +117,42 @@ def best_chain_length(
     return best_k if best_v >= t_min else 0
 
 
+def best_chain_length_batched(alpha, c, k_max: int, t_min: float):
+    """Device twin of ``best_chain_length`` over per-slot alphas, jnp.
+
+    ``alpha`` (B,) f32, ``c`` scalar array, static ``k_max``/``t_min``;
+    returns (B,) int32 budgets. Argmax over the same T_SD grid with
+    first-max tie-breaking (the host loop only replaces on strictly
+    greater), gated to 0 below ``t_min`` — so the single-dispatch round
+    computes round r+1's draft lengths inside round r's executable."""
+    import jax.numpy as jnp
+
+    from repro.core.ewif import t_sd_grid
+
+    vals = t_sd_grid(alpha, c, k_max)                 # (B, k_max+1), k=0 first
+    best_k = jnp.argmax(vals, axis=1).astype(jnp.int32)
+    best_v = jnp.max(vals, axis=1)
+    return jnp.where(best_v >= t_min, best_k, 0)
+
+
+def best_tree_expansions_batched(alpha, c, e_max: int, t_min: float):
+    """Device twin of ``best_tree_expansions`` over per-slot alphas, jnp:
+    argmax of the Eq. 5 objective (drafter as its own continuation), gated
+    on the chain EWIF at the chosen budget. Returns (B,) int32."""
+    import jax.numpy as jnp
+
+    from repro.core.ewif import dytc_objective_grid, t_sd_grid
+
+    if e_max <= 0:
+        return jnp.zeros(alpha.shape, jnp.int32)
+    obj = dytc_objective_grid(alpha, c, e_max)        # (B, e_max), k=1 first
+    best_k = (1 + jnp.argmax(obj, axis=1)).astype(jnp.int32)
+    gate = jnp.take_along_axis(
+        t_sd_grid(alpha, c, e_max), best_k[:, None], axis=1
+    )[:, 0]
+    return jnp.where(gate >= t_min, best_k, 0)
+
+
 def best_cascade_plan(
     alphas: Sequence[float],
     cs: Sequence[float],

@@ -2,7 +2,25 @@
 
 Retrieval-based n-gram drafting [Saxena 2023]: find the longest suffix of the
 current context that re-occurs earlier in the context and propose the tokens
-that followed it. Negligible cost (c ~ 0.01), host-side numpy.
+that followed it. Negligible cost (c ~ 0.01).
+
+Two implementations with pinned identical semantics:
+
+  - ``PromptLookup`` — host-side numpy, one context at a time. The reference
+    implementation and the parity oracle for the device path
+    (tests/test_pld_device.py).
+  - ``propose_device`` — batched jnp window-compare over a device-resident
+    ``(B, L)`` context buffer; jit-safe, so the single-dispatch serving
+    round (``core.engine.chain_round``/``tree_round``) retrieves PLD drafts
+    *inside* the round dispatch instead of a per-slot Python loop.
+
+Pinned semantics (both paths): the proposal is the continuation of the most
+recent earlier occurrence of the longest matching context suffix, where
+
+  - the occurrence must have a continuation (tokens follow the match), and
+  - the continuation must not run into the suffix itself — tokens at or past
+    the suffix start ``n - ng`` are never proposed (an occurrence whose
+    continuation would start there is skipped entirely).
 """
 from __future__ import annotations
 
@@ -37,23 +55,65 @@ class PromptLookup:
             return empty, 0.0
         for ng in range(min(self.max_ngram, n - 1), self.min_ngram - 1, -1):
             suffix = ctx[n - ng :]
-            # all windows of length ng ending strictly before the suffix
-            limit = n - ng
-            if limit <= 0:
-                continue
             windows = np.lib.stride_tricks.sliding_window_view(ctx[: n - 1], ng)
             hits = np.flatnonzero((windows == suffix).all(axis=1))
-            hits = hits[hits + ng < n]          # must have a continuation
-            hits = hits[hits + ng <= n - 1]
-            # prefer the most recent occurrence (better locality)
-            for start in hits[::-1]:
-                cont_start = start + ng
-                cont_end = min(cont_start + k, n - ng)  # avoid trivially matching the suffix itself
-                cont_end = min(cont_start + k, n)
-                cont = ctx[cont_start : cont_end]
-                # never propose past the suffix start (that's the suffix itself)
-                cont = cont[: max(0, (n - ng) - cont_start)]
-                if len(cont):
-                    conf = ng / self.max_ngram
-                    return cont[:k].copy(), conf
+            # the continuation must exist AND start strictly before the
+            # suffix itself (start + ng < n - ng): a later occurrence only
+            # yields suffix tokens, which are never proposed
+            hits = hits[hits + 2 * ng < n]
+            if len(hits):
+                # the most recent admissible occurrence (better locality)
+                cont_start = int(hits[-1]) + ng
+                cont = ctx[cont_start : min(cont_start + k, n - ng)]
+                return cont.copy(), ng / self.max_ngram
         return empty, 0.0
+
+
+def propose_device(
+    ctx: "jax.Array",                  # noqa: F821 — (B, L) int32 context buffer
+    length: "jax.Array",               # noqa: F821 — (B,) int32 context length (incl. pending)
+    k: int,
+    *,
+    max_ngram: int = 4,
+    min_ngram: int = 1,
+):
+    """Batched on-device PLD: exact parity with ``PromptLookup.propose``.
+
+    ``ctx[b, :length[b]]`` is slot b's context (committed tokens + the
+    pending bonus token); positions past ``length`` are ignored. Returns
+    ``(chains (B, k) int32, have (B,) int32)`` — the per-slot proposal
+    zero-padded past ``have``, exactly the layout the serving round's
+    drafting scans consume. Pure jnp (one fused window-compare per n-gram
+    size, O(B * L * max_ngram^2) integer compares), so it traces into the
+    single-dispatch round executable with no host loop.
+    """
+    import jax.numpy as jnp
+
+    B, L = ctx.shape
+    s_idx = jnp.arange(L)
+    n = length.astype(jnp.int32)
+    chains = jnp.zeros((B, k), jnp.int32)
+    have = jnp.zeros((B,), jnp.int32)
+    found = jnp.zeros((B,), bool)
+    for ng in range(max_ngram, min_ngram - 1, -1):
+        # window-compare: eq[b, s] <=> ctx[b, s:s+ng] == suffix(b, ng)
+        eq = jnp.ones((B, L), bool)
+        for i in range(ng):
+            win = jnp.take(ctx, jnp.minimum(s_idx + i, L - 1), axis=1)
+            suf_pos = jnp.clip(n - ng + i, 0, L - 1)[:, None]
+            eq &= win == jnp.take_along_axis(ctx, suf_pos, axis=1)
+        # admissible: continuation exists and starts before the suffix
+        # (s + 2*ng < n) — and the suffix itself must fit (n >= ng + 1)
+        valid = (s_idx[None, :] + 2 * ng < n[:, None]) & (n[:, None] >= ng + 1)
+        best_s = jnp.max(jnp.where(eq & valid, s_idx[None, :], -1), axis=1)
+        hit = best_s >= 0
+        cont0 = best_s + ng
+        idx = jnp.clip(cont0[:, None] + jnp.arange(k)[None, :], 0, L - 1)
+        toks = jnp.take_along_axis(ctx, idx, axis=1).astype(jnp.int32)
+        h_ng = jnp.clip(n - ng - cont0, 0, k).astype(jnp.int32)
+        use = hit & ~found                 # longest n-gram wins
+        chains = jnp.where(use[:, None], toks, chains)
+        have = jnp.where(use, h_ng, have)
+        found |= hit
+    chains = jnp.where(jnp.arange(k)[None, :] < have[:, None], chains, 0)
+    return chains, have

@@ -160,3 +160,38 @@ def tree_seed_arrays(
     mask |= (j[None, None, :] < j[None, :, None]) & seeded[:, :, None]
     count = (have + 1).astype(np.int32)
     return tokens, parents, depth, p_acc, mask, count
+
+
+def tree_seed_device(
+    pending,                      # (B,) int32 device
+    chains,                       # (B, K) int32 device — PLD chain per slot
+    have,                         # (B,) int32 device
+    bucket: int,
+    pld_alpha: float = 0.3,
+):
+    """jnp twin of ``tree_seed_arrays`` — same node layout, mask convention
+    and P_acc seeding, but traced on device so the single-dispatch serving
+    round (``core.engine.tree_round``) seeds its trees inside the round
+    executable instead of a host numpy step. Shapes are static (``bucket``),
+    values all come from carried device state."""
+    import jax.numpy as jnp
+
+    B, K = chains.shape
+    N = bucket
+    if N < K + 1:
+        raise ValueError(f"bucket {N} cannot hold a {K}-token chain + root")
+    j = jnp.arange(N)
+    seeded = (j[None, :] >= 1) & (j[None, :] <= have[:, None])    # (B, N)
+    tokens = jnp.zeros((B, N), jnp.int32).at[:, 0].set(pending.astype(jnp.int32))
+    tokens = tokens.at[:, 1 : K + 1].set(
+        jnp.where(seeded[:, 1 : K + 1], chains.astype(jnp.int32), 0)
+    )
+    parents = jnp.where(seeded, j[None, :] - 1, -1).astype(jnp.int32)
+    depth = jnp.where(seeded, j[None, :], 0).astype(jnp.int32)
+    p_acc = jnp.where(
+        seeded, jnp.float32(pld_alpha) ** depth.astype(jnp.float32), 0.0
+    ).at[:, 0].set(1.0).astype(jnp.float32)
+    mask = jnp.broadcast_to(jnp.eye(N, dtype=bool), (B, N, N))
+    mask = mask | ((j[None, None, :] < j[None, :, None]) & seeded[:, :, None])
+    count = (have + 1).astype(jnp.int32)
+    return tokens, parents, depth, p_acc, mask, count

@@ -639,6 +639,22 @@ def decode_commit_token(
     return logits[:, 0], new_cache
 
 
+def write_slot(cfg: ModelConfig, cache: Cache, c1: Cache, slot) -> Cache:
+    """Write a freshly prefilled B=1 cache into batch slot ``slot`` of the
+    batched cache — one dynamic-update per leaf, jit-friendly (``slot`` may
+    be traced, so one executable serves every slot). Jitted with the batched
+    cache donated, admission updates the largest live buffer in place
+    instead of round-tripping a full copy through the host.
+    """
+    new_segments = jax.tree.map(
+        lambda dst, src: dst.at[:, slot].set(src[:, 0].astype(dst.dtype)),
+        cache["segments"],
+        c1["segments"],
+    )
+    pos = cache["pos"].at[slot].set(c1["pos"][0])
+    return {"pos": pos, "segments": new_segments}
+
+
 def commit_cache(
     cfg: ModelConfig,
     cache: Cache,

@@ -68,7 +68,17 @@ class ServeLoop:
     """Continuous-batching driver: admits queued requests into server slots,
     steps the server, routes per-slot tokens back to their requests, and
     releases slots of finished requests (freeing their per-slot adaptive
-    draft-length estimators for the next admission)."""
+    draft-length estimators for the next admission).
+
+    Pipelined servers (``round_mode="single"`` with ``sync_every > 1``)
+    return tokens lazily: a ``step()`` may return nothing (rounds still in
+    flight) or several rounds' worth at a sync point. The loop stays
+    correct under that contract by draining the server *before* re-binding
+    any slot: in-flight tokens are routed under the slot→request mapping
+    they were produced under, and only then does admission rebind the slot.
+    A finished request may overshoot ``max_new_tokens`` by the rounds that
+    were in flight when it crossed the line — the surplus is trimmed at
+    retire, exactly like the synchronous path trims a long accepted chain."""
 
     def __init__(self, server, scheduler: RequestScheduler):
         self.server = server
@@ -76,17 +86,33 @@ class ServeLoop:
         self._slot_req: Dict[int, Request] = {}
         self._req_slot: Dict[int, int] = {}   # request_id -> slot
 
+    def _route(self, out: Dict[int, List[int]]) -> None:
+        for slot, toks in out.items():
+            req = self._slot_req.get(slot)
+            if req is not None and not req.done:
+                req.generated.extend(toks)
+
     def step_once(self) -> Dict[int, List[int]]:
+        out: Dict[int, List[int]] = {}
+        will_admit = bool(self.scheduler.queue) and (
+            len(self.scheduler.active) < self.scheduler.max_batch
+        )
+        if will_admit:
+            # sync-on-admit: drain in-flight rounds and route them under the
+            # OLD slot mapping before any slot is re-bound
+            flush = getattr(self.server, "flush", None)
+            if flush is not None:
+                out = flush()
+                self._route(out)
         for slot in self.scheduler.admit():
             req = self.scheduler.active[slot]
             self.server.add_request(slot, req.prompt)
             self._slot_req[slot] = req
             self._req_slot[req.request_id] = slot
-        out = self.server.step()
-        for slot, toks in out.items():
-            req = self._slot_req.get(slot)
-            if req is not None and not req.done:
-                req.generated.extend(toks)
+        step_out = self.server.step()
+        self._route(step_out)
+        for slot, toks in step_out.items():
+            out.setdefault(slot, []).extend(toks)
         for req in self.scheduler.retire():
             req.generated = req.generated[: req.max_new_tokens]
             slot = self._req_slot.pop(req.request_id)

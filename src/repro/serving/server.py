@@ -26,6 +26,23 @@ Four proposal modes (see docs/serving.md):
 All modes verify jointly in one target forward and commit per-sequence
 (divergent accepted lengths are supported by the (B,)-pos cache).
 
+Round execution (``round_mode=``): ``chain_fused``/``tree_fused`` run either
+``"single"`` (the default) — ONE fused, device-resident jitted dispatch per
+round (``core.engine.chain_round``/``tree_round``: device PLD over a carried
+(B, max_len) context buffer, Eq. 4 EMAs + Eq. 5 budgets as carried device
+arrays, draft + verify + accept + commit in one executable, cache and state
+donated so the commit scatter aliases in place) — or ``"split"`` (the PR-4
+structure: host PLD + one drafting dispatch + one verify dispatch with host
+syncs between them; kept as the A/B baseline and the host-side oracle). In
+single mode the host loop is a pipelined consumer: ``step()`` dispatches the
+next round immediately and only drains accepted tokens from already-resolved
+device futures every ``sync_every`` rounds (or on admission/retire), so
+steady state has zero ``block_until_ready`` between rounds. ``legacy``
+is always split (it IS the per-step baseline); ``cascade_fused`` keeps its
+bounded one-dispatch-per-level structure but folds the target verify into
+the last rescore dispatch (``core.engine.cascade_rescore_verify``) and
+donates the cache into it.
+
 Draft-KV execution (``draft_kv=``): the fused drafting scans run either in
 ``"recompute"`` (every step re-decodes the whole padded node block — O(E*N)
 node-forwards per round) or ``"carry"`` (staged draft KV is carried in the
@@ -87,6 +104,7 @@ batching reuses slots across requests).
 from __future__ import annotations
 
 import functools
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -95,9 +113,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import BlockKind, ModelConfig
-from repro.core.acceptance import AcceptanceTracker
+from repro.core.acceptance import AcceptanceTracker, ema_init
 from repro.core.dsia import DraftSpec, PLD_SPEC, build_hierarchy
-from repro.core.engine import cascade_rescore, chain_draft_scan, tree_draft_scan
+from repro.core.engine import (
+    cascade_rescore,
+    cascade_rescore_verify,
+    chain_draft_scan,
+    chain_round,
+    tree_draft_scan,
+    tree_round,
+    tree_verify_accept_commit as _tree_verify_accept_commit,
+    verify_accept_commit as _verify_accept_commit,
+)
 from repro.core.latency import (
     CostTracker,
     best_cascade_plan,
@@ -106,71 +133,11 @@ from repro.core.latency import (
 )
 from repro.core.pld import PromptLookup
 from repro.core.tree import bucket_for, tree_seed_arrays
-from repro.core.verify import greedy_accept_tree_batched
 from repro.models import model as M
 from repro.serving.draft_bank import DraftBank
 
 PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused", "cascade_fused")
-
-
-def _tree_verify_accept_commit(
-    cfg: ModelConfig,
-    params: dict,
-    cache: dict,
-    tokens: jax.Array,                # (B, N) int32 padded tree node tokens
-    parents: jax.Array,               # (B, N) int32, -1 at root/unused
-    depth: jax.Array,                 # (B, N) int32
-    mask: jax.Array,                  # (B, N, N) bool ancestor closure
-    count: jax.Array,                 # (B,) int32 real nodes per slot
-    live: jax.Array,                  # (B,) bool
-    *,
-    attn_backend: Optional[str] = None,
-):
-    """One fused target round for tree proposals: decode the whole padded
-    node block jointly under per-slot ancestor-closure masks (the intra-tree
-    attention half routes through ``kernels.tree_attention`` when
-    ``attn_backend="pallas"``), walk the longest target-greedy path per slot
-    with a vectorized tree walk, and commit the accepted path's staged KV.
-    Returns (cache, path_idx (B,N), n_acc (B,), bonus (B,))."""
-    qpos = cache["pos"][:, None] + depth
-    logits, staged = M.decode_step(
-        cfg, params, cache, tokens, tree_mask=mask, q_pos=qpos,
-        attn_backend=attn_backend,
-    )
-    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, N)
-    path, n_acc, bonus = greedy_accept_tree_batched(tokens, parents, count, nxt)
-    n_acc = jnp.where(live, n_acc, 0).astype(jnp.int32)
-    new_cache = M.commit_cache(cfg, cache, staged, path, n_acc)
-    return new_cache, path, n_acc, bonus
-
-
-def _verify_accept_commit(
-    cfg: ModelConfig,
-    params: dict,
-    cache: dict,
-    pending: jax.Array,               # (B,) int32
-    chains: jax.Array,                # (B, k) int32
-    have: jax.Array,                  # (B,) int32
-    live: jax.Array,                  # (B,) bool
-):
-    """One fused target round: verify [pending, chain] jointly, accept the
-    longest matching prefix per slot (vectorized — no per-slot Python), and
-    commit the accepted path. Returns (cache, nxt, n_chain, new_pending)."""
-    toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, k+1)
-    logits, staged = M.decode_step(cfg, params, cache, toks)
-    nxt = jnp.argmax(logits, -1).astype(jnp.int32)               # (B, k+1)
-    B, K = chains.shape
-    ok = (chains == nxt[:, :K]) & (jnp.arange(K)[None] < have[:, None])
-    # accepted chain prefix length: leading run of matches
-    n_chain = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
-    n_chain = jnp.where(live, n_chain, 0)
-    n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)    # + pending
-    new_pending = jnp.take_along_axis(nxt, n_chain[:, None], axis=1)[:, 0]
-    path_idx = jnp.broadcast_to(
-        jnp.arange(K + 1, dtype=jnp.int32)[None], (B, K + 1)
-    )
-    new_cache = M.commit_cache(cfg, cache, staged, path_idx, n_acc)
-    return new_cache, nxt, n_chain, new_pending
+ROUND_MODES = ("auto", "single", "split")
 
 
 class BatchedSpecServer:
@@ -195,6 +162,9 @@ class BatchedSpecServer:
         hierarchy: Optional[List[DraftSpec]] = None,  # cascade_fused levels
         int8_exec: str = "auto",       # bank int8 path: auto | kernel | sim
         draft_kv: str = "auto",        # drafting scans: auto | carry | recompute
+        round_mode: str = "auto",      # auto | single (one dispatch/round) | split
+        sync_every: Optional[int] = None,   # single: drain every N rounds
+        donate: Optional[bool] = None,      # None = auto (see below)
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
@@ -203,6 +173,32 @@ class BatchedSpecServer:
             mode = "chain_fused" if fused else "legacy"
         if mode not in PROPOSAL_MODES:
             raise ValueError(f"unknown proposal mode {mode!r}; pick one of {PROPOSAL_MODES}")
+        if round_mode not in ROUND_MODES:
+            raise ValueError(
+                f"unknown round_mode {round_mode!r}; pick one of {ROUND_MODES}"
+            )
+        if round_mode == "auto":
+            round_mode = "single" if mode in ("chain_fused", "tree_fused") else "split"
+        if round_mode == "single" and mode not in ("chain_fused", "tree_fused"):
+            raise ValueError(
+                "round_mode='single' applies to chain_fused/tree_fused; "
+                "legacy IS the per-step split baseline, and cascade_fused "
+                "keeps one dispatch per level (the target verify rides the "
+                "last rescore dispatch instead)"
+            )
+        self.round_mode = round_mode
+        if sync_every is None:
+            sync_every = int(os.environ.get("REPRO_SYNC_EVERY") or 1)
+        self.sync_every = max(int(sync_every), 1)
+        if donate is None:
+            # donate on accelerators (aliasing the KV cache in place is the
+            # HBM win); keep it OFF on CPU, where donating a buffer that an
+            # in-flight round is still producing blocks the dispatching
+            # thread until the producer finishes — serializing exactly the
+            # async pipeline single mode exists for (measured ~3x round
+            # slowdown in benchmarks/serve_batched.py's round arms)
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
         if draft_kv not in ("auto", "carry", "recompute"):
             raise ValueError(
                 f"unknown draft_kv {draft_kv!r}; pick auto, carry or recompute"
@@ -288,15 +284,89 @@ class BatchedSpecServer:
         self.live = np.zeros(max_batch, bool)
         self._pld_have = np.zeros(max_batch, np.int32)   # PLD prefix per round
 
-        self._prefill1 = jax.jit(lambda p, b, c: M.prefill(cfg, p, b, c))
+        # device-resident round state (single mode): the carried arrays the
+        # fused round reads AND maintains — pending/live, the PLD context
+        # buffer, and the per-slot Eq. 4 estimator (see acceptance.ema_init)
+        prior0 = float(draft_spec.prior_alpha) if draft_spec else 0.5
+        al0, h0, hn0, hp0 = ema_init(max_batch, prior=prior0)
+        self.dstate = {
+            "pending": jnp.zeros((max_batch,), jnp.int32),
+            "live": jnp.zeros((max_batch,), bool),
+            "ctx": jnp.zeros((max_batch, max_len), jnp.int32),
+            "alpha": al0, "hist": h0, "hist_n": hn0, "hist_ptr": hp0,
+        }
+        self._prior_alpha = prior0
+        c0 = float(draft_spec.prior_c) if draft_spec else 0.5
+        self._c_dev = jnp.asarray(max(c0, 1e-3), jnp.float32)
+        self._inflight: List[dict] = []     # undrained round outputs (single)
+        self._out_buf: Dict[int, List[int]] = {}
+
+        don = lambda *idx: idx if self.donate else ()   # noqa: E731
+        # admission: the fresh B=1 cache is donated into the prefill, and
+        # the batched cache is donated into the jitted slot write — no host
+        # round trip, no full-cache copy
+        self._prefill1 = jax.jit(
+            lambda p, b, c: M.prefill(cfg, p, b, c), donate_argnums=don(2)
+        )
+        self._write_slot_fn = jax.jit(
+            functools.partial(M.write_slot, cfg), donate_argnums=don(0)
+        )
+
+        def _admit(state, slot, ctx_row, last_logits):
+            prior = jnp.float32(self._prior_alpha)
+            W = state["hist"].shape[1]
+            return {
+                "pending": state["pending"].at[slot].set(
+                    jnp.argmax(last_logits[0], -1).astype(jnp.int32)
+                ),
+                "live": state["live"].at[slot].set(True),
+                "ctx": state["ctx"].at[slot].set(ctx_row),
+                "alpha": state["alpha"].at[slot].set(prior),
+                "hist": state["hist"].at[slot].set(jnp.zeros((W,), jnp.float32)),
+                "hist_n": state["hist_n"].at[slot].set(0),
+                "hist_ptr": state["hist_ptr"].at[slot].set(0),
+            }
+
+        self._admit_fn = jax.jit(_admit, donate_argnums=don(0))
+
         # legacy (unfused) drafting path — kept for A/B benchmarking
         self._decode = jax.jit(
             lambda p, c, t, g: M.decode_step(cfg, p, c, t, gates=g)
         )
-        self._verify = jax.jit(functools.partial(_verify_accept_commit, cfg))
+        self._verify = jax.jit(
+            functools.partial(_verify_accept_commit, cfg), donate_argnums=don(1)
+        )
         self._tree_verify = jax.jit(functools.partial(
             _tree_verify_accept_commit, cfg, attn_backend=attn_backend,
-        ))
+        ), donate_argnums=don(1))
+        self._round_fn = None
+        if self.round_mode == "single":
+            pld_kw = dict(
+                max_ngram=self.pld.max_ngram, min_ngram=self.pld.min_ngram
+            )
+            if mode == "chain_fused":
+                fn = functools.partial(
+                    chain_round, cfg, draft_k=draft_k,
+                    use_draft=draft_spec is not None, adaptive=adaptive,
+                    min_obs=min_obs, t_min=float(t_min),
+                    draft_kv=self.draft_kv, **pld_kw,
+                )
+            else:
+                fn = functools.partial(
+                    tree_round, cfg, draft_k=draft_k,
+                    expansions=tree_expansions, top_k=tree_top_k,
+                    top_p=tree_top_p, bucket=self.tree_bucket,
+                    pld_alpha=float(PLD_SPEC.prior_alpha),
+                    use_draft=draft_spec is not None, adaptive=adaptive,
+                    min_obs=min_obs, t_min=float(t_min),
+                    draft_kv=self.draft_kv, attn_backend=attn_backend,
+                    **pld_kw,
+                )
+            # donate the cache AND the carried state: the commit scatter and
+            # the state updates alias in place instead of copying the
+            # largest live buffers every round
+            self._round_fn = jax.jit(fn, donate_argnums=don(1, 2))
+        self._rescore_verify_fns: Dict[int, callable] = {}
         self._draft_fns: Dict[int, callable] = {}   # scan steps -> jitted fn
         self._tree_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
         self._casc_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
@@ -317,15 +387,40 @@ class BatchedSpecServer:
             "draft_dispatches": 0, "draft_time": 0.0, "verify_time": 0.0,
             "drafted_tokens": 0,
             "rescore_dispatches": 0, "rescore_time": 0.0,
+            # round-pipeline accounting: jitted dispatches per fused round,
+            # host sync points (block_until_ready events), and the wall time
+            # the host spent blocked on device results
+            "round_dispatches": 0, "host_syncs": 0, "device_wait": 0.0,
         }
 
     # ------------------------------------------------------------ admission
     def add_request(self, slot: int, prompt: np.ndarray) -> None:
-        """Prefill one prompt into a batch slot."""
+        """Prefill one prompt into a batch slot.
+
+        The fresh B=1 cache is donated into the prefill dispatch and the
+        batched cache into one jitted dynamic-update (``models.model
+        .write_slot``) — admission never round-trips cache buffers through
+        the host. In pipelined single mode, any in-flight rounds are drained
+        first (sync-on-admit) and whatever the RE-BOUND slot had buffered is
+        discarded: those tokens belong to the previous request and can no
+        longer be attributed once the slot is re-bound. Call ``flush()``
+        before re-binding to collect them — ``ServeLoop`` drains and routes
+        under the old mapping before every admission, so it never loses
+        any."""
+        if self._inflight:
+            self._drain()
+        self._out_buf.pop(slot, None)
         prompt = np.asarray(prompt, np.int32)
         c1 = M.init_cache(self.cfg, 1, self.max_len, dtype=jnp.dtype(self.cfg.dtype))
         last, c1 = self._prefill1(self.params, {"tokens": jnp.asarray(prompt[None])}, c1)
-        self._write_slot(slot, c1)
+        slot_d = jnp.asarray(slot, jnp.int32)
+        self.cache = self._write_slot_fn(self.cache, c1, slot_d)
+        # device round state: pending/live/context row + a fresh Eq. 4
+        # estimator seeded with the draft's cold-start prior
+        row = np.zeros(self.max_len, np.int32)
+        row[: len(prompt)] = prompt
+        self.dstate = self._admit_fn(self.dstate, slot_d, jnp.asarray(row), last)
+        # host mirrors (split/legacy/cascade rounds + inspection)
         self.pending[slot] = int(np.argmax(np.asarray(last)[0]))
         self.contexts[slot] = list(map(int, prompt))
         self.live[slot] = True
@@ -345,25 +440,29 @@ class BatchedSpecServer:
     def release(self, slot: int) -> None:
         """Mark a slot free (its request finished or was cancelled)."""
         self.live[slot] = False
+        self.dstate = dict(
+            self.dstate, live=self.dstate["live"].at[slot].set(False)
+        )
 
     def _slot_key(self, slot: int) -> str:
         return f"chain:{slot}"
 
-    def _write_slot(self, slot: int, c1: dict) -> None:
-        # cache leaves: segments (R, B, ...) and pos (B,)
-        new_segments = jax.tree.map(
-            lambda dst, src: dst.at[:, slot].set(src[:, 0]),
-            self.cache["segments"],
-            c1["segments"],
-        )
-        pos = self.cache["pos"].at[slot].set(c1["pos"][0])
-        self.cache = {"pos": pos, "segments": new_segments}
-
     # ----------------------------------------------------- adaptive lengths
     def _slot_limit(self, slot: int) -> int:
-        """Neural draft budget for a slot this round (PLD is never capped)."""
+        """Neural draft budget for a slot this round (PLD is never capped).
+
+        In single round mode this is an inspection mirror of the on-device
+        Eq. 5 selection (the round computes budgets from the carried state
+        arrays itself); split rounds compute it here from the host trackers."""
         if self.draft_spec is None:
             return 0
+        if self.round_mode == "single":
+            if not self.adaptive or int(self.dstate["hist_n"][slot]) < self.min_obs:
+                return self.k
+            alpha = float(self.dstate["alpha"][slot])
+            return best_chain_length(
+                alpha, float(self._c_dev), self.k, self.t_min
+            )
         key = self._slot_key(slot)
         if not self.adaptive or self.acceptance.counts(key) < self.min_obs:
             return self.k
@@ -374,9 +473,17 @@ class BatchedSpecServer:
         return best_chain_length(alpha, max(c, 1e-3), self.k, self.t_min)
 
     def _slot_tree_budget(self, slot: int) -> int:
-        """Tree expansion budget for a slot this round (Eq. 5 objective)."""
+        """Tree expansion budget for a slot this round (Eq. 5 objective).
+        Single round mode: inspection mirror of the on-device selection."""
         if self.draft_spec is None:
             return 0
+        if self.round_mode == "single":
+            if not self.adaptive or int(self.dstate["hist_n"][slot]) < self.min_obs:
+                return self.tree_expansions
+            alpha = float(self.dstate["alpha"][slot])
+            return best_tree_expansions(
+                alpha, float(self._c_dev), self.tree_expansions, self.t_min
+            )
         key = self._slot_key(slot)
         if not self.adaptive or self.acceptance.counts(key) < self.min_obs:
             return self.tree_expansions
@@ -436,6 +543,26 @@ class BatchedSpecServer:
             self._rescore_fns[level] = fn
         return fn
 
+    def _rescore_verify_fn(self, level: int):
+        """The LAST rescore dispatch with the target verify folded in
+        (``core.engine.cascade_rescore_verify``): the strongest level's
+        intermediate verify and the target's verify + commit ride one
+        jitted call, with the cache donated so the commit aliases in
+        place — an L-level cascade round stays at L dispatches."""
+        fn = self._rescore_verify_fns.get(level)
+        if fn is None:
+            lvl = self.bank.levels[level]
+            fn = jax.jit(
+                functools.partial(
+                    cascade_rescore_verify, self.cfg, quantize=lvl.quantize,
+                    attn_override=lvl.attn_override,
+                    attn_backend=self.attn_backend,
+                ),
+                donate_argnums=(2,) if self.donate else (),
+            )
+            self._rescore_verify_fns[level] = fn
+        return fn
+
     # ------------------------------------------------------------- stepping
     def _pld_chains(self):
         """Per-slot PLD proposals (B, k) — free host-side retrieval drafts.
@@ -489,6 +616,8 @@ class BatchedSpecServer:
         chains, have = np.asarray(ch_d), np.asarray(hv_d)
         self.stats["draft_dispatches"] += 1
         self.stats["draft_time"] += dt
+        self.stats["host_syncs"] += 1
+        self.stats["device_wait"] += dt
         self.stats["drafted_tokens"] += steps
         # per-draft-step latency (the whole batch advances one token per
         # step) -> c_hat = draft-step / verify-round, the c in T_SD
@@ -511,15 +640,73 @@ class BatchedSpecServer:
                 self.params, self.cache, jnp.asarray(toks), self._gates
             )
             nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+            dt = time.perf_counter() - t0
             self.stats["draft_dispatches"] += 1
-            self.stats["draft_time"] += time.perf_counter() - t0
+            self.stats["draft_time"] += dt
+            self.stats["host_syncs"] += 1
+            self.stats["device_wait"] += dt
             fill = (have <= j) & (j < limit)
             chains[fill, j] = nxt[fill]
             have = np.maximum(have, np.where(fill, j + 1, have)).astype(np.int32)
         return chains, have
 
+    # ------------------------------------------------- pipelined single rounds
+    def _drain(self) -> None:
+        """Block once on every in-flight round's outputs (they are usually
+        already resolved — later rounds were dispatched behind them) and
+        fold their accepted tokens into the output buffer, in round order."""
+        if not self._inflight:
+            return
+        outs, self._inflight = self._inflight, []
+        t0 = time.perf_counter()
+        jax.block_until_ready([o["n_acc"] for o in outs])
+        self.stats["host_syncs"] += 1
+        self.stats["device_wait"] += time.perf_counter() - t0
+        for o in outs:
+            acc, n_acc = np.asarray(o["acc"]), np.asarray(o["n_acc"])
+            self.stats["drafted_tokens"] += int(np.asarray(o["drafted"]))
+            for b in range(self.B):
+                nb = int(n_acc[b])
+                if nb:
+                    self._out_buf.setdefault(b, []).extend(
+                        int(t) for t in acc[b, :nb]
+                    )
+                    self.stats["tokens"] += nb
+
+    def flush(self) -> Dict[int, List[int]]:
+        """Drain every in-flight round and return the buffered tokens per
+        slot. The pipelined loop calls this every ``sync_every`` rounds and
+        before re-binding a slot (admission/retire); split rounds have
+        nothing in flight and this is a cheap no-op."""
+        self._drain()
+        out, self._out_buf = self._out_buf, {}
+        return out
+
+    def _step_single(self) -> Dict[int, List[int]]:
+        """One fused round: dispatch the single jitted round executable and
+        return immediately — accepted tokens are drained from already-
+        resolved device futures every ``sync_every`` rounds, so the device
+        never waits for the host between rounds."""
+        self.cache, self.dstate, out = self._round_fn(
+            self.params, self.cache, self.dstate, self._c_dev, self._gates
+        )
+        self._inflight.append(out)
+        self.stats["steps"] += 1
+        self.stats["round_dispatches"] += 1
+        self.stats["target_calls"] += 1
+        if len(self._inflight) >= self.sync_every:
+            return self.flush()
+        if self._out_buf:    # drained out-of-band (e.g. by an admission)
+            out_b, self._out_buf = self._out_buf, {}
+            return out_b
+        return {}
+
     def step(self) -> Dict[int, List[int]]:
-        """One speculative round for the whole batch; returns new tokens."""
+        """One speculative round for the whole batch; returns new tokens
+        (in pipelined single mode: the tokens drained *so far* — possibly
+        from earlier rounds, possibly empty between sync points)."""
+        if self.round_mode == "single":
+            return self._step_single()
         if self.mode == "tree_fused":
             return self._step_tree()
         if self.mode == "cascade_fused":
@@ -535,6 +722,8 @@ class BatchedSpecServer:
             )
         )
         dt = time.perf_counter() - t0
+        self.stats["host_syncs"] += 1
+        self.stats["device_wait"] += dt
         self.cache = new_cache
         self.stats["target_calls"] += 1
         self.stats["verify_time"] += dt
@@ -605,6 +794,8 @@ class BatchedSpecServer:
             )
             self.stats["draft_dispatches"] += 1
             self.stats["draft_time"] += dt
+            self.stats["host_syncs"] += 1
+            self.stats["device_wait"] += dt
             self.stats["drafted_tokens"] += int(
                 np.clip(count - have - 1, 0, None).sum()
             )
@@ -621,6 +812,8 @@ class BatchedSpecServer:
         self.cache = new_cache
         self.stats["target_calls"] += 1
         self.stats["verify_time"] += dt
+        self.stats["host_syncs"] += 1
+        self.stats["device_wait"] += dt
         self.costs.observe_target(dt, tokens=1)
 
         path, n_acc, bonus = np.asarray(path), np.asarray(n_acc), np.asarray(bonus)
@@ -731,6 +924,8 @@ class BatchedSpecServer:
              first_neural) = out
             self.stats["draft_dispatches"] += 1
             self.stats["draft_time"] += dt
+            self.stats["host_syncs"] += 1
+            self.stats["device_wait"] += dt
             self.stats["drafted_tokens"] += int(
                 np.clip(np.asarray(d_count) - have - 1, 0, None).sum()
             )
@@ -738,26 +933,53 @@ class BatchedSpecServer:
 
         # vertical rescores: just-above-drafter first, strongest level last,
         # each ONE jitted dispatch; the probe chain carries each level's
-        # first own prediction to the next level's Eq. 4 judgement
+        # first own prediction to the next level's Eq. 4 judgement. The
+        # STRONGEST level's dispatch also carries the target verify + commit
+        # (cascade_rescore_verify, donated cache) — L dispatches per
+        # rescored round, not L + 1.
         probe = first_neural
         level_node = np.full(self.B, -1, np.int32)
+        live_d = jnp.asarray(self.live)
         if use_rescore.any():
             apply = jnp.asarray(use_rescore & self.live)
             for lvl in bank.rescorers:
                 r = lvl.index
+                last_level = lvl is bank.rescorers[-1]
                 t0 = time.perf_counter()
-                out = jax.block_until_ready(self._rescore_fn(r)(
-                    lvl.params, self.cache,
-                    d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
-                    probe, apply, jnp.asarray(resc_alphas[r]),
-                    self._level_gates[r],
-                ))
+                if last_level:
+                    out = jax.block_until_ready(self._rescore_verify_fn(r)(
+                        lvl.params, self.params, self.cache,
+                        d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                        probe, apply, jnp.asarray(resc_alphas[r]),
+                        self._level_gates[r], live_d,
+                    ))
+                    (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                     lvl_node_d, probe_ok, probe_valid,
+                     new_cache, path, n_acc, bonus) = out
+                else:
+                    out = jax.block_until_ready(self._rescore_fn(r)(
+                        lvl.params, self.cache,
+                        d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                        probe, apply, jnp.asarray(resc_alphas[r]),
+                        self._level_gates[r],
+                    ))
+                    (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
+                     lvl_node_d, probe_ok, probe_valid) = out
                 dt = time.perf_counter() - t0
-                (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
-                 lvl_node_d, probe_ok, probe_valid) = out
                 self.stats["rescore_dispatches"] += 1
-                self.stats["rescore_time"] += dt
-                self.costs.observe(bank.cost_key(r), dt, tokens=1)
+                self.stats["host_syncs"] += 1
+                self.stats["device_wait"] += dt
+                if last_level:
+                    # the fused dispatch contains the target verify; its
+                    # wall time prices the TARGET round (the level's own
+                    # cost coefficient keeps its prior / last split-mode
+                    # estimate — see docs/cascade.md)
+                    self.stats["target_calls"] += 1
+                    self.stats["verify_time"] += dt
+                    self.costs.observe_target(dt, tokens=1)
+                else:
+                    self.stats["rescore_time"] += dt
+                    self.costs.observe(bank.cost_key(r), dt, tokens=1)
                 # Eq. 4: this level's verdict on level r+1's first token
                 pv, pk = np.asarray(probe_valid), np.asarray(probe_ok)
                 for b in range(self.B):
@@ -767,18 +989,21 @@ class BatchedSpecServer:
                         )
                 probe = lvl_node_d
             level_node = np.asarray(probe)
-
-        t0 = time.perf_counter()
-        new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
-            self.params, self.cache,
-            d_tokens, d_parents, d_depth, d_mask, d_count,
-            jnp.asarray(self.live),
-        ))
-        dt = time.perf_counter() - t0
-        self.cache = new_cache
-        self.stats["target_calls"] += 1
-        self.stats["verify_time"] += dt
-        self.costs.observe_target(dt, tokens=1)
+            self.cache = new_cache
+        else:
+            t0 = time.perf_counter()
+            new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
+                self.params, self.cache,
+                d_tokens, d_parents, d_depth, d_mask, d_count,
+                live_d,
+            ))
+            dt = time.perf_counter() - t0
+            self.cache = new_cache
+            self.stats["target_calls"] += 1
+            self.stats["verify_time"] += dt
+            self.stats["host_syncs"] += 1
+            self.stats["device_wait"] += dt
+            self.costs.observe_target(dt, tokens=1)
 
         tokens_h = np.asarray(d_tokens)
         parents_h = np.asarray(d_parents)

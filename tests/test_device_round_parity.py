@@ -1,0 +1,173 @@
+"""Host/device parity for the carried round state: the Eq. 4 EMA estimator
+(`acceptance.ema_update` vs `AcceptanceTracker`), the Eq. 5 budget searches
+(`latency.best_*_batched` vs the host loops), and the device tree seeding
+(`tree.tree_seed_device` vs `tree.tree_seed_arrays`). These are the pieces
+the single-dispatch serving round carries on device; the host paths stay the
+oracles."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.acceptance import AcceptanceTracker, ema_init, ema_update
+from repro.core.latency import (
+    best_chain_length,
+    best_chain_length_batched,
+    best_tree_expansions,
+    best_tree_expansions_batched,
+)
+from repro.core.tree import tree_seed_arrays, tree_seed_device
+
+
+def test_ema_update_matches_tracker():
+    """Random per-slot observation streams (with gaps): the device ring
+    buffer EMA must track the host deque EMA slot for slot."""
+    rng = np.random.default_rng(0)
+    B, rounds = 4, 120
+    tracker = AcceptanceTracker()
+    prior = 0.37
+    for b in range(B):
+        tracker.set_prior(f"s{b}", prior)
+    alpha, hist, hist_n, hist_ptr = ema_init(B, prior=prior)
+    for _ in range(rounds):
+        valid = rng.random(B) < 0.7
+        outcome = (rng.random(B) < 0.4).astype(np.float32)
+        for b in range(B):
+            if valid[b]:
+                tracker.observe(f"s{b}", bool(outcome[b]))
+        alpha, hist, hist_n, hist_ptr = ema_update(
+            alpha, hist, hist_n, hist_ptr,
+            jnp.asarray(outcome), jnp.asarray(valid),
+        )
+    for b in range(B):
+        assert np.isclose(float(alpha[b]), tracker.alpha(f"s{b}"), atol=1e-5)
+        assert int(hist_n[b]) == tracker.counts(f"s{b}")
+
+
+def _assert_equiv_budget(got, want, value_of, gate_of, t_min):
+    """Budgets must agree except at exact mathematical ties (e.g.
+    t_sd(a, c, 1) == 1.0 == t_sd(a, c, 0) exactly when a == c), where f32
+    and f64 rounding may break the tie differently — both choices then have
+    equal expected speedup, so either is admissible."""
+    if got == want:
+        return
+    if (got == 0) != (want == 0):
+        # a gate flip (0 vs >0) is only admissible right at the threshold
+        assert abs(gate_of(max(got, want)) - t_min) < 1e-4, (got, want)
+    else:
+        v_got, v_want = value_of(got), value_of(want)
+        assert abs(v_got - v_want) < 1e-5, (got, want, v_got, v_want)
+
+
+def test_best_chain_length_batched_matches_host():
+    from repro.core.ewif import t_sd
+
+    alphas = np.array([0.01, 0.1, 0.3, 0.5, 0.7, 0.9, 0.97, 0.999], np.float32)
+    for c in (0.02, 0.1, 0.3, 0.6, 0.95):
+        for t_min in (1.0, 1.05, 1.5, 1e9):
+            got = np.asarray(best_chain_length_batched(
+                jnp.asarray(alphas), jnp.asarray(c, jnp.float32), 8, t_min
+            ))
+            for a, g in zip(alphas, got):
+                w = best_chain_length(float(a), c, 8, t_min)
+                v = lambda k, a=a: t_sd(float(a), c, k)   # noqa: E731
+                _assert_equiv_budget(int(g), w, v, v, t_min)
+
+
+def test_best_tree_expansions_batched_matches_host():
+    from repro.core.ewif import dytc_step_objective, t_sd
+
+    alphas = np.array([0.05, 0.2, 0.4, 0.6, 0.8, 0.95], np.float32)
+    for c in (0.05, 0.2, 0.5):
+        for t_min in (1.0, 1.05, 1e9):
+            got = np.asarray(best_tree_expansions_batched(
+                jnp.asarray(alphas), jnp.asarray(c, jnp.float32), 6, t_min
+            ))
+            for a, g in zip(alphas, got):
+                w = best_tree_expansions(float(a), c, 6, t_min)
+                _assert_equiv_budget(
+                    int(g), w,
+                    lambda k, a=a: dytc_step_objective(
+                        float(a), c, k, float(a), c
+                    ),
+                    lambda k, a=a: t_sd(float(a), c, k),
+                    t_min,
+                )
+
+
+def test_dynamic_steps_matches_static_scan():
+    """``dynamic_steps=True`` (the on-device while_loop trip count) must be
+    token-identical to the static scan for BOTH draft scans and both
+    draft-KV modes — iterations past the per-round need are no-ops, so
+    skipping them may never change a proposal."""
+    import dataclasses
+    import functools
+
+    import jax
+
+    from repro.config import get_config
+    from repro.core.dsia import layer_sparsity
+    from repro.core.engine import chain_draft_scan, tree_draft_scan
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    gates = jnp.asarray(layer_sparsity(cfg, 0.5).gates_array(cfg.num_layers))
+    prompts = jnp.asarray(
+        np.stack([[5, 6, 7, 8] * 3, [9, 10, 11, 9, 10, 11] * 2]), jnp.int32
+    )
+    cache = M.init_cache(cfg, 2, 64)
+    last, cache = M.prefill(cfg, params, {"tokens": prompts}, cache)
+    pending = jnp.argmax(last, -1).astype(jnp.int32)
+
+    K = 4
+    chains = jnp.zeros((2, K), jnp.int32)
+    have = jnp.zeros((2,), jnp.int32)
+    for kv in ("recompute", "carry"):
+        for limit in ([0, 0], [2, 1], [4, 3]):   # none / partial / full need
+            runs = []
+            for dyn in (False, True):
+                fn = jax.jit(functools.partial(
+                    chain_draft_scan, cfg, K, draft_kv=kv, dynamic_steps=dyn
+                ))
+                runs.append([np.asarray(a) for a in fn(
+                    params, cache, pending, chains, have,
+                    jnp.asarray(limit, jnp.int32), gates,
+                )])
+            for a, b in zip(*runs):              # bitwise: same math path
+                np.testing.assert_array_equal(a, b, err_msg=f"{kv} {limit}")
+
+    seed = tree_seed_device(pending, chains, have, 16, pld_alpha=0.3)
+    c = jnp.asarray(0.3, jnp.float32)
+    t_min = jnp.asarray(1.0, jnp.float32)
+    alpha = jnp.asarray([0.8, 0.6], jnp.float32)
+    for kv in ("recompute", "carry"):
+        for limit in ([0, 0], [3, 1], [5, 5]):
+            runs = []
+            for dyn in (False, True):
+                fn = jax.jit(functools.partial(
+                    tree_draft_scan, cfg, 5, 2, draft_kv=kv, dynamic_steps=dyn
+                ))
+                runs.append([np.asarray(a) for a in fn(
+                    params, cache, *seed, jnp.asarray(limit, jnp.int32),
+                    alpha, c, t_min, gates,
+                )])
+            for a, b in zip(*runs):
+                np.testing.assert_array_equal(a, b, err_msg=f"{kv} {limit}")
+
+
+def test_tree_seed_device_matches_host():
+    rng = np.random.default_rng(3)
+    B, K, N = 3, 4, 16
+    pending = rng.integers(0, 50, B).astype(np.int32)
+    chains = rng.integers(0, 50, (B, K)).astype(np.int32)
+    have = np.array([0, 2, 4], np.int32)
+    host = tree_seed_arrays(pending, chains, have, N, pld_alpha=0.3)
+    dev = tree_seed_device(
+        jnp.asarray(pending), jnp.asarray(chains), jnp.asarray(have), N,
+        pld_alpha=0.3,
+    )
+    names = ("tokens", "parents", "depth", "p_acc", "mask", "count")
+    for name, h, d in zip(names, host, dev):
+        np.testing.assert_allclose(
+            np.asarray(d), np.asarray(h, dtype=np.asarray(d).dtype),
+            rtol=1e-6, err_msg=name,
+        )

@@ -200,7 +200,8 @@ def test_server_carry_pos_untouched_by_drafting():
                for _ in range(2)]
     srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
                             draft_spec=SPEC, mode="tree_fused",
-                            adaptive=False, draft_kv="carry")
+                            adaptive=False, draft_kv="carry",
+                            round_mode="split")
     for i, p in enumerate(prompts):
         srv.add_request(i, p)
     orig = srv._tree_draft_fn

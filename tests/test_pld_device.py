@@ -1,0 +1,137 @@
+"""PLD semantics + host/device parity (no hypothesis dependency).
+
+Pins the documented ``core.pld`` semantics directly — "never propose the
+suffix itself, must have a continuation" — against a brute-force reference,
+and uses the host implementation as the exact-parity oracle for the
+vectorized device path the single-dispatch serving round traces in.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.pld import PromptLookup, propose_device
+
+
+# ------------------------------------------------------------ host semantics
+def _brute_force(ctx, k, max_ngram=4, min_ngram=1):
+    """Reference: longest suffix n-gram, most recent admissible occurrence,
+    continuation cropped before the suffix start."""
+    ctx = list(ctx)
+    n = len(ctx)
+    for ng in range(min(max_ngram, n - 1), min_ngram - 1, -1):
+        suffix = ctx[n - ng:]
+        best = None
+        for s in range(0, n - 1 - ng + 1):
+            if ctx[s:s + ng] == suffix and s + 2 * ng < n:
+                best = s
+        if best is not None:
+            cont = ctx[best + ng : min(best + ng + k, n - ng)]
+            return cont, ng
+    return [], 0
+
+
+def test_never_proposes_the_suffix_itself():
+    """The only earlier occurrence overlaps the suffix region — proposing
+    its continuation would re-propose suffix tokens, so PLD must fall back
+    to a shorter n-gram whose continuation lies strictly before it."""
+    pld = PromptLookup(max_ngram=3)
+    out = pld.propose(np.array([1, 2, 3, 1, 2, 3], np.int64), 3)
+    # 3-gram [1,2,3] at s=0 has no admissible continuation (it would start
+    # at the suffix); the 2-gram [2,3] at s=1 continues with [1]
+    assert list(out) == [1]
+
+
+def test_must_have_a_continuation():
+    pld = PromptLookup(max_ngram=2)
+    assert list(pld.propose(np.array([4, 5, 4, 5], np.int64), 4)) == [4]
+    # no earlier occurrence at all -> nothing proposed
+    assert len(pld.propose(np.array([1, 2, 3, 4, 5], np.int64), 4)) == 0
+
+
+def test_continuation_cropped_at_suffix_start():
+    """A long continuation stops at the suffix start, not at k."""
+    pld = PromptLookup(max_ngram=2)
+    #          [7,8] -> 1, 2, 3   then the suffix [7,8] again
+    ctx = np.array([7, 8, 1, 2, 3, 7, 8], np.int64)
+    out = pld.propose(ctx, 10)
+    assert list(out) == [1, 2, 3]
+
+
+def test_confidence_scales_with_ngram():
+    pld = PromptLookup(max_ngram=4)
+    ctx = np.array([7, 8, 1, 0, 5, 6, 7, 8, 2, 0, 5, 6, 7, 8], np.int64)
+    toks, conf = pld.propose_with_confidence(ctx, 1)
+    assert list(toks) == [2] and conf == 1.0          # 4-gram match
+    toks, conf = pld.propose_with_confidence(np.array([4, 5, 4, 5], np.int64), 1)
+    assert conf == 0.25                               # 1-gram fallback
+
+
+def test_host_matches_brute_force():
+    """The numpy implementation equals the O(n^2) reference on random
+    low-entropy streams (where matches are plentiful) for every k."""
+    rng = np.random.default_rng(0)
+    pld = PromptLookup(max_ngram=4)
+    for _ in range(300):
+        n = int(rng.integers(2, 40))
+        ctx = rng.integers(0, 5, size=n)
+        k = int(rng.integers(1, 7))
+        got, conf = pld.propose_with_confidence(ctx, k)
+        want, ng = _brute_force(ctx, k)
+        assert list(got) == list(want), (list(ctx), k)
+        if want:
+            assert conf == ng / pld.max_ngram
+
+
+# ------------------------------------------------------------- device parity
+def _device_batch(ctxs, k, L=64, max_ngram=4, min_ngram=1):
+    B = len(ctxs)
+    buf = np.zeros((B, L), np.int32)
+    length = np.zeros((B,), np.int32)
+    for b, c in enumerate(ctxs):
+        buf[b, : len(c)] = c
+        length[b] = len(c)
+    chains, have = propose_device(
+        jnp.asarray(buf), jnp.asarray(length), k,
+        max_ngram=max_ngram, min_ngram=min_ngram,
+    )
+    return np.asarray(chains), np.asarray(have)
+
+
+def test_device_matches_host_random():
+    """Exact parity: the batched jnp window-compare equals the host loop on
+    random streams of mixed lengths and entropies."""
+    rng = np.random.default_rng(1)
+    pld = PromptLookup(max_ngram=4)
+    for vocab in (3, 5, 50):
+        ctxs = [rng.integers(0, vocab, size=int(rng.integers(2, 60)))
+                for _ in range(32)]
+        k = 5
+        chains, have = _device_batch(ctxs, k)
+        for b, ctx in enumerate(ctxs):
+            want = pld.propose(ctx, k)
+            assert have[b] == len(want), (list(ctx),)
+            assert list(chains[b, : have[b]]) == list(want)
+            assert (chains[b, have[b]:] == 0).all()   # zero-padded tail
+
+
+def test_device_matches_host_edge_lengths():
+    """Tiny contexts (n <= min_ngram) and exact-boundary overlaps."""
+    cases = [
+        [1], [1, 1], [1, 2], [2, 2, 2], [1, 2, 3, 1, 2, 3],
+        [4, 5, 4, 5], [9] * 12, list(range(8)) + list(range(8)),
+    ]
+    pld = PromptLookup(max_ngram=4)
+    chains, have = _device_batch(cases, 4)
+    for b, ctx in enumerate(cases):
+        want = pld.propose(np.asarray(ctx), 4)
+        assert have[b] == len(want) and list(chains[b, : have[b]]) == list(want)
+
+
+def test_device_pld_is_jittable():
+    import jax
+
+    fn = jax.jit(lambda c, n: propose_device(c, n, 4))
+    # suffix [6,7] recurs at s=1 with continuation [5] (the 3-gram match at
+    # s=0 is inadmissible: its continuation would be the suffix itself)
+    ctx = jnp.asarray(np.array([[5, 6, 7, 5, 6, 7, 0, 0]], np.int32))
+    chains, have = fn(ctx, jnp.asarray([6], jnp.int32))
+    assert int(have[0]) == 1 and int(chains[0, 0]) == 5

@@ -95,8 +95,9 @@ def test_cascade_fused_scaling_hierarchy_lossless():
 
 # ------------------------------------------------------- dispatch discipline
 def test_bounded_dispatches_per_round():
-    """Per round: ONE drafting scan + ONE rescore per stronger level + ONE
-    target verify — never more, regardless of per-slot routing."""
+    """Per round: ONE drafting scan + ONE rescore per stronger level, with
+    the target verify riding the LAST rescore dispatch — never more,
+    regardless of per-slot routing."""
     srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
                             mode="cascade_fused", adaptive=False)
     n_levels = len(srv.bank)
@@ -109,7 +110,10 @@ def test_bounded_dispatches_per_round():
     assert srv.stats["rescore_dispatches"] == n_rounds * (n_levels - 1)
     assert srv.stats["target_calls"] == n_rounds
     assert len(srv._casc_draft_fns) == 1      # fixed budget -> one compile
-    assert len(srv._rescore_fns) == n_levels - 1
+    # bounded compile caches: one executable per rescoring level (the
+    # strongest level's carries the folded target verify)
+    assert (len(srv._rescore_fns) + len(srv._rescore_verify_fns)
+            == n_levels - 1)
 
 
 def test_cascade_budget_collapses_to_pld_only():

@@ -80,10 +80,12 @@ def test_equivalence_when_drafting_stops():
 
 
 def test_one_draft_dispatch_per_propose_round():
-    """Regression: the fused path issues exactly ONE jitted drafting
-    dispatch per propose round (the seed issued one per draft token)."""
+    """Regression: the fused SPLIT path issues exactly ONE jitted drafting
+    dispatch per propose round (the seed issued one per draft token; the
+    single-dispatch round is pinned in tests/test_server_round.py)."""
     srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
-                            draft_spec=SPEC, fused=True, adaptive=False)
+                            draft_spec=SPEC, fused=True, adaptive=False,
+                            round_mode="split")
     calls = []
     orig = srv._draft_fn
 
@@ -182,10 +184,12 @@ def test_adaptive_chain_length_monotone():
 
 def test_server_slot_limits_track_acceptance():
     """A slot with collapsed acceptance stops drafting; a healthy slot keeps
-    its full budget. Admission resets the slot estimator."""
+    its full budget. Admission resets the slot estimator. (Split rounds:
+    this drives the HOST trackers directly; the device-side analogue is
+    tests/test_server_round.py::test_device_routing_stops_drafting.)"""
     srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=128, draft_k=4,
                             draft_spec=SPEC, fused=True, adaptive=True,
-                            min_obs=4, t_min=1.05)
+                            min_obs=4, t_min=1.05, round_mode="split")
     # healthy draft economics: drafts cost ~10% of a verify round
     srv.costs.observe_target(1.0, tokens=1)
     srv.costs.observe("chain_draft", 0.1, tokens=1)

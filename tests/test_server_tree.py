@@ -73,11 +73,13 @@ def test_tree_fused_lossless_random_prompts():
 
 
 def test_one_tree_dispatch_per_round():
-    """The fused tree path issues exactly ONE drafting dispatch and ONE
-    verify dispatch per round (the host DyTC loop pays one dispatch per
-    expansion plus one per verify)."""
+    """The fused SPLIT tree path issues exactly ONE drafting dispatch and
+    ONE verify dispatch per round (the host DyTC loop pays one dispatch per
+    expansion plus one per verify; the single-dispatch round is pinned in
+    tests/test_server_round.py)."""
     srv = BatchedSpecServer(CFG, PARAMS, max_batch=2, max_len=256, draft_k=4,
                             draft_spec=SPEC, mode="tree_fused",
+                            round_mode="split",
                             adaptive=False)
     calls = []
     orig = srv._tree_draft_fn
