@@ -10,6 +10,7 @@ import json
 import os
 import sys
 import time
+from typing import Optional
 
 sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -49,12 +50,12 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(suites)
     os.makedirs(args.out, exist_ok=True)
     results = {}
-    canary: SystemExit = None
+    canary: Optional[SystemExit] = None
     for name, fn in suites.items():
         if name not in only:
             continue
         print(f"### {name}")
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             results[name] = fn()
         except SystemExit as e:
@@ -64,7 +65,7 @@ def main() -> None:
             canary = e
             results[name] = dict(getattr(e, "results", {}),
                                  canary_failed=str(e))
-        print(f"### {name} done in {time.time()-t0:.1f}s")
+        print(f"### {name} done in {time.perf_counter()-t0:.1f}s")
     with open(os.path.join(args.out, "bench.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
     if args.trend_out and "serve" in results:

@@ -55,14 +55,14 @@ step_fn = jax.jit(make_train_step(cfg, peak_lr=6e-4, warmup=20,
 corpus = synthetic_corpus(cfg.vocab_size, 200_000)
 it = lm_batches(corpus, batch, seq)
 
-t0 = time.time()
+t0 = time.perf_counter()
 for i in range(args.steps):
     b = {k: jnp.asarray(v) for k, v in next(it).items()}
     params, opt, m = step_fn(params, opt, b)
     if i % max(args.steps // 10, 1) == 0:
         print(f"step {i:4d}  ce={float(m['ce']):.3f}  lr={float(m['lr']):.2e}  "
               f"gnorm={float(m['grad_norm']):.2f}")
-print(f"trained {args.steps} steps in {time.time()-t0:.0f}s; "
+print(f"trained {args.steps} steps in {time.perf_counter()-t0:.0f}s; "
       f"final ce={float(m['ce']):.3f}")
 save_checkpoint(args.out, params, opt, step=args.steps)
 print(f"checkpoint -> {args.out}")

@@ -21,4 +21,12 @@ export REPRO_SYNC_EVERY="${REPRO_SYNC_EVERY:-}"
 python -m pip install -q -r requirements-dev.txt 2>/dev/null \
   || echo "warning: could not install dev deps; property-based modules will be skipped"
 
+# Dispatch-discipline lint (REPRO001-005, stdlib-only — see docs/analysis.md)
+# runs before the suite so a host-sync/use-after-donate regression fails
+# fast with a file:line instead of a counter mismatch deep in a server test.
+# REPRO_SKIP_LINT=1 skips it (e.g. when iterating on a single test module).
+if [ -z "${REPRO_SKIP_LINT:-}" ]; then
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.lint src/repro
+fi
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

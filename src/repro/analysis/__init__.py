@@ -1,4 +1,21 @@
-"""Compiled-artifact analysis: roofline terms + HLO collective accounting."""
+"""Compiled-artifact + static analysis: roofline terms, HLO collective
+accounting, dispatch-discipline lint (REPRO001-005, ``analysis.lint``) and
+compiled-HLO dispatch contracts (``analysis.contracts``)."""
+from repro.analysis.contracts import (
+    ContractViolation,
+    HloContract,
+    server_round_contracts,
+)
+from repro.analysis.lint import Finding, run_paths
 from repro.analysis.roofline import RooflineReport, analyze_compiled, collective_bytes
 
-__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes"]
+__all__ = [
+    "ContractViolation",
+    "Finding",
+    "HloContract",
+    "RooflineReport",
+    "analyze_compiled",
+    "collective_bytes",
+    "run_paths",
+    "server_round_contracts",
+]

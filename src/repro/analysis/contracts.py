@@ -1,0 +1,227 @@
+"""Compiled-HLO dispatch contracts for the serving rounds.
+
+The runtime counters in ``BatchedSpecServer.stats`` observe the dispatch
+discipline (one executable per chain/tree round, <= L+1 for the cascade,
+donated caches, no host syncs between rounds); this module proves the same
+facts on the COMPILED artifact, so the contract holds before a single round
+runs and cannot drift from what XLA actually lowered:
+
+  - donation lowered for real: ``donate_argnums`` must show up as
+    ``input_output_alias`` entries in the HloModule header — if jax ever
+    silently drops the aliasing (dtype mismatch, sharding change), the
+    "in-place commit scatter" claim in docs/serving.md is a copy again;
+  - no host round-trips inside a round body: callbacks
+    (``jax.debug.print`` / ``pure_callback`` / ``io_callback`` lower to
+    ``custom-call`` with a python-callback target) and infeed/outfeed/
+    send/recv ops are all grounds for rejection;
+  - expected ``known_trip_count``s: the fused rounds are lax.scans over
+    draft steps / tree expansions — the trip counts pin that the scan
+    structure survived lowering (a full unroll or a dynamic while both
+    break the one-executable-many-steps story).
+
+Built on the HLO text parser in ``analysis.hlo_costs`` (same grammar, same
+``known_trip_count`` source) and the lowering idiom of
+``tests/test_sharding_lowering.py``. Pinned for all four server modes in
+``tests/test_dispatch_contracts.py``, cross-validated there against the
+runtime ``round_dispatches``/``host_syncs`` stats.
+
+Typical use::
+
+    con = HloContract.from_jitted(srv._round_fn, *args, name="round")
+    con.assert_donated(1, 2)          # cache + dstate alias into outputs
+    con.assert_no_host_callbacks()
+    con.assert_trip_count(draft_k)    # the draft scan survived lowering
+
+    cons = server_round_contracts(srv)        # every executable of a round
+    assert len(cons) <= srv.expected_dispatches_per_round()
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Dict, Tuple
+
+from repro.analysis.hlo_costs import parse_hlo
+
+__all__ = [
+    "ContractViolation",
+    "HloContract",
+    "server_round_contracts",
+]
+
+
+class ContractViolation(AssertionError):
+    """A compiled artifact broke a dispatch-discipline contract."""
+
+
+# (param_number, param_index_tree, kind) triples inside input_output_alias
+_ALIAS_PAIR = re.compile(r"\((\d+),\s*\{[^{}]*\},\s*(may-alias|must-alias)\)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# python host callbacks lower to custom-calls whose target embeds
+# "callback" (xla_python_cpu_callback, xla_ffi_python_cpu_callback, ...)
+_CUSTOM_TARGET = re.compile(r'custom_call_target="([^"]+)"')
+_HOST_TRANSFER_OPS = ("infeed(", "outfeed(", " send(", " recv(",
+                      "send-done(", "recv-done(")
+
+
+def _balanced_block(text: str, start: int) -> str:
+    """The ``{...}`` block starting at ``text[start]`` with nesting honored
+    (alias maps nest tuple-index braces inside the outer map braces)."""
+    assert text[start] == "{"
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start:i + 1]
+    return text[start:]
+
+
+@dataclasses.dataclass(frozen=True)
+class HloContract:
+    """Parsed dispatch-discipline facts of one compiled executable."""
+
+    name: str
+    text: str
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def from_compiled(cls, compiled, name: str = "jit") -> "HloContract":
+        return cls(name, compiled.as_text())
+
+    @classmethod
+    def from_jitted(cls, fn, *args, name: str = "jit", **kwargs) -> "HloContract":
+        """Lower + compile a jitted callable on example args (lowering does
+        NOT execute, so donated example buffers stay valid)."""
+        return cls.from_compiled(fn.lower(*args, **kwargs).compile(), name=name)
+
+    # ---------------------------------------------------------------- facts
+    @functools.cached_property
+    def donated_params(self) -> Tuple[int, ...]:
+        """Flat entry-parameter numbers that alias an output buffer
+        (``donate_argnums`` that actually survived lowering). NOTE: these
+        are positions in the FLATTENED argument list, not pytree argnums —
+        assert non-emptiness / counts, or membership of position 0 only
+        when the signature starts with a donated leaf."""
+        m = re.search(r"input_output_alias=\{", self.text)
+        if not m:
+            return ()
+        block = _balanced_block(self.text, m.end() - 1)
+        return tuple(sorted({int(p) for p, _ in _ALIAS_PAIR.findall(block)}))
+
+    @functools.cached_property
+    def alias_count(self) -> int:
+        """Number of output buffers aliased onto inputs."""
+        m = re.search(r"input_output_alias=\{", self.text)
+        if not m:
+            return 0
+        block = _balanced_block(self.text, m.end() - 1)
+        return len(_ALIAS_PAIR.findall(block))
+
+    @functools.cached_property
+    def trip_counts(self) -> Tuple[int, ...]:
+        """``known_trip_count`` of every while loop, descending (the layer
+        stack, KV chunk streams, and the draft/expansion scans all lower as
+        counted whiles)."""
+        return tuple(sorted((int(n) for n in _TRIP.findall(self.text)),
+                            reverse=True))
+
+    @functools.cached_property
+    def host_callbacks(self) -> Tuple[str, ...]:
+        """custom-call targets that re-enter python on the host."""
+        return tuple(
+            t for t in _CUSTOM_TARGET.findall(self.text)
+            if "callback" in t.lower()
+        )
+
+    @functools.cached_property
+    def host_transfer_ops(self) -> Tuple[str, ...]:
+        """infeed/outfeed/send/recv ops (host transfers inside the body)."""
+        found = []
+        for line in self.text.splitlines():
+            for op in _HOST_TRANSFER_OPS:
+                if op in line:
+                    found.append(op.strip().rstrip("("))
+                    break
+        return tuple(found)
+
+    @functools.cached_property
+    def executable_costs(self) -> dict:
+        """Trip-count-aware flops/collective bytes (analysis.hlo_costs)."""
+        from repro.analysis.hlo_costs import total_costs
+
+        return total_costs(self.text)
+
+    def computations(self):
+        """The parsed computation call graph (analysis.hlo_costs grammar)."""
+        return parse_hlo(self.text)
+
+    # ----------------------------------------------------------- assertions
+    def _fail(self, msg: str) -> None:
+        raise ContractViolation(f"[{self.name}] {msg}")
+
+    def assert_donated(self, *expect_flat: int, at_least: int = 1) -> "HloContract":
+        """Donation survived lowering: at least ``at_least`` aliased
+        outputs, and (when given) each flat param position in
+        ``expect_flat`` aliases."""
+        if self.alias_count < at_least:
+            self._fail(
+                f"expected >= {at_least} input_output_alias entries, found "
+                f"{self.alias_count} — donation did not survive lowering"
+            )
+        missing = [p for p in expect_flat if p not in self.donated_params]
+        if missing:
+            self._fail(
+                f"flat params {missing} not aliased "
+                f"(aliased: {list(self.donated_params)})"
+            )
+        return self
+
+    def assert_not_donated(self) -> "HloContract":
+        if self.alias_count:
+            self._fail(
+                f"expected no aliasing, found {self.alias_count} "
+                f"input_output_alias entries on params {list(self.donated_params)}"
+            )
+        return self
+
+    def assert_no_host_callbacks(self) -> "HloContract":
+        if self.host_callbacks:
+            self._fail(
+                "host python callbacks inside the executable: "
+                f"{list(self.host_callbacks)} — a round body must not "
+                "re-enter the host"
+            )
+        if self.host_transfer_ops:
+            self._fail(
+                f"host transfer ops inside the executable: "
+                f"{list(self.host_transfer_ops)}"
+            )
+        return self
+
+    def assert_trip_count(self, n: int) -> "HloContract":
+        """Some counted while loop runs exactly ``n`` times (the fused scan
+        over draft steps / expansions survived lowering at its trip count)."""
+        if n not in self.trip_counts:
+            self._fail(
+                f"no while loop with known_trip_count={n} "
+                f"(found: {list(self.trip_counts)})"
+            )
+        return self
+
+
+def server_round_contracts(server) -> Dict[str, HloContract]:
+    """Compile-and-parse every executable a steady-state round of
+    ``server`` dispatches (``BatchedSpecServer.round_executables``).
+
+    ``len(result)`` is the per-round executable count the runtime
+    ``round_dispatches``/``draft_dispatches``/``rescore_dispatches``
+    counters must agree with (cross-validated in
+    tests/test_dispatch_contracts.py)."""
+    return {
+        name: HloContract.from_jitted(fn, *args, name=name)
+        for name, (fn, args) in server.round_executables().items()
+    }

@@ -15,7 +15,7 @@ multiplies through ``known_trip_count`` annotations on while ops, and sums:
 from __future__ import annotations
 
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
@@ -78,7 +78,7 @@ class Computation:
 
 def parse_hlo(text: str) -> Dict[str, Computation]:
     comps: Dict[str, Computation] = {}
-    cur: Computation = None
+    cur: Optional[Computation] = None
     shapes: Dict[str, Tuple[str, List[int]]] = {}
     entry = None
     for raw in text.splitlines():

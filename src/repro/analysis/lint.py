@@ -1,0 +1,831 @@
+"""Dispatch-discipline lint: JAX-aware AST rules for the serving hot paths.
+
+The invariants that deliver CAS-Spec's speedup — one device dispatch per
+chain/tree round, <= L+1 for the cascade, zero host syncs between rounds,
+donated caches actually reused — are runtime-enforced by the counters in
+``tests/test_server_round.py``. This module enforces the same discipline
+*statically*, at lint time, so a new code path cannot silently reintroduce
+the host-gated regime (see also ``analysis.contracts`` for the compiled-HLO
+half of the story).
+
+Rules (each documented with a bad/good example in ``docs/analysis.md``):
+
+  REPRO001  host-sync hazards inside device-reachable code: ``.item()``,
+            ``np.asarray``/``np.array``, ``float()/int()/bool()`` applied to
+            indexed or jnp-produced values, ``jax.device_get`` and
+            ``block_until_ready`` inside any function reachable (via a
+            static call-graph walk) from the fused round/scan roots
+            (``chain_round``, ``tree_round``, ``cascade_rescore*``,
+            ``chain_draft_scan``, ``tree_draft_scan``).
+  REPRO002  use-after-donate: reading a variable after it was passed in a
+            donated argument position of a jitted call — the buffer may
+            already be aliased by the callee's outputs.
+  REPRO003  recompilation hazards: ``jax.jit`` constructed inside a
+            ``for``/``while`` loop, or constructed-and-immediately-called
+            inside a function (a fresh executable per invocation).
+  REPRO004  scan/cond/while body purity: host side effects (``print``,
+            ``open``, ``time.*``), ``np.asarray``/``np.array`` on tracers,
+            ``.item()``, or mutation of enclosing state (``self.*`` stores,
+            ``global``/``nonlocal``) inside a ``lax.scan``/``cond``/
+            ``while_loop``/``fori_loop``/``switch`` body.
+  REPRO005  timing hygiene: ``time.time()`` anywhere (wall-clock is not
+            monotonic; use ``time.perf_counter()``), and perf-counter
+            deltas that time a jitted dispatch without a
+            ``block_until_ready`` between start and stop (async dispatch
+            returns immediately — the measurement is a lie).
+
+Waivers: append ``# repro: noqa-REPRO00x: <why this is safe here>`` to the
+flagged line. The justification text is REQUIRED — a bare waiver is itself
+reported (REPRO000), so every suppression carries its reasoning in-line.
+
+CLI::
+
+    python -m repro.analysis.lint src/repro            # exit 1 on findings
+    python -m repro.analysis.lint --roots my_round f.py
+
+The implementation is stdlib-only (ast + re) so the lint gate runs without
+jax installed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# Functions whose (transitive) callees must stay host-sync free. Matching is
+# by bare name so fixture/test files defining their own `chain_round` are
+# rooted too; `cascade_rescore` is a prefix match (covers _verify fold).
+DEFAULT_ROOTS = (
+    "chain_round",
+    "tree_round",
+    "cascade_rescore",
+    "chain_draft_scan",
+    "tree_draft_scan",
+)
+
+RULES = {
+    "REPRO000": "lint waiver without a justification",
+    "REPRO001": "host-sync hazard in device-reachable code",
+    "REPRO002": "variable read after being donated into a jitted call",
+    "REPRO003": "recompilation hazard (jit constructed per call)",
+    "REPRO004": "host side effect inside a traced loop/cond body",
+    "REPRO005": "timing hygiene (wall clock / unsynced device timing)",
+}
+
+_NUMPY_HOST_FNS = {"asarray", "array", "ascontiguousarray", "copy", "save"}
+_LAX_BODY_FNS = {
+    # callee suffix -> argument indices holding traced function references
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2, 3),
+    "switch": (1, 2, 3, 4, 5, 6, 7),
+}
+_WAIVER_RE = re.compile(
+    r"#\s*repro:\s*noqa-(REPRO\d{3})\b[:\s-]*(.*?)\s*$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    msg: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.msg}"
+
+
+@dataclasses.dataclass
+class _Jitted:
+    """A callable known to be ``jax.jit(...)`` output: where its result is
+    bound, and which argument positions/names are donated."""
+    name: str                      # "fn" | "self.attr" | "factory:self.attr"
+    donate_pos: Tuple[int, ...]
+    donate_names: Tuple[str, ...]
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Module:
+    """One parsed file: imports, function defs, parents, jit registry."""
+
+    def __init__(self, path: str, source: str, name: str):
+        self.path = path
+        self.name = name
+        self.source_lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+        # local alias -> imported module fqname ("np" -> "numpy")
+        self.mod_alias: Dict[str, str] = {}
+        # local symbol -> imported fqname ("ema_update" -> "...acceptance.ema_update")
+        self.sym_alias: Dict[str, str] = {}
+        # qualname within module -> def node ("Server.step", "chain_round")
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        self.jitted: Dict[str, _Jitted] = {}
+        self._collect_imports()
+        self._collect_functions()
+        self._collect_jitted()
+
+    # ------------------------------------------------------------ collection
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.mod_alias[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+                    if a.asname:
+                        self.mod_alias[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    fq = f"{node.module}.{a.name}"
+                    local = a.asname or a.name
+                    # could be a module or a symbol; record as both
+                    self.mod_alias.setdefault(local, fq)
+                    self.sym_alias[local] = fq
+
+    def _collect_functions(self) -> None:
+        def visit(node: ast.AST, prefix: str) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    q = f"{prefix}{child.name}"
+                    self.functions[q] = child  # type: ignore[assignment]
+                    visit(child, q + ".")
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, f"{prefix}{child.name}.")
+                else:
+                    visit(child, prefix)
+
+        visit(self.tree, "")
+
+    def resolve_base(self, name: str) -> Optional[str]:
+        """Module fqname a bare name refers to (via import), if any."""
+        return self.mod_alias.get(name)
+
+    def is_numpy(self, node: ast.AST) -> bool:
+        d = _dotted(node)
+        if not d:
+            return False
+        base = d.split(".")[0]
+        return self.mod_alias.get(base, "") == "numpy" or base == "numpy"
+
+    def is_jax_name(self, node: ast.AST, suffix: str) -> bool:
+        """Does ``node`` (a call's func) denote jax.<suffix> under this
+        module's imports (jax.jit, jax.lax.scan, ...)?"""
+        d = _dotted(node)
+        if not d:
+            return False
+        base = d.split(".")[0]
+        fq = self.mod_alias.get(base)
+        if fq:
+            d = fq + d[len(base):]
+        if d == f"jax.{suffix}" or d.endswith(f"jax.{suffix}"):
+            return True
+        # from jax import lax; lax.scan / from jax import jit; jit(...)
+        sym = self.sym_alias.get(d.split(".")[0])
+        if sym:
+            d2 = sym + d[len(d.split(".")[0]):]
+            return d2 == f"jax.{suffix}" or d2.endswith(f"jax.{suffix}")
+        return False
+
+    # ---------------------------------------------------------- jit registry
+    @staticmethod
+    def _donate_values(node: ast.AST) -> Tuple[int, ...]:
+        """Int positions out of a donate_argnums value expression; handles
+        literals, tuples, ``cond(...) if flag else ()`` and the repo's
+        ``don(1, 2)`` helper-call idiom (conservatively: donation ON)."""
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return (node.value,)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            out: List[int] = []
+            for e in node.elts:
+                out.extend(_Module._donate_values(e))
+            return tuple(out)
+        if isinstance(node, ast.IfExp):
+            return tuple(
+                sorted(
+                    set(_Module._donate_values(node.body))
+                    | set(_Module._donate_values(node.orelse))
+                )
+            )
+        if isinstance(node, ast.Call):
+            out = []
+            for e in node.args:
+                out.extend(_Module._donate_values(e))
+            return tuple(out)
+        return ()
+
+    def jit_donation(self, call: ast.Call) -> Optional[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+        """(positions, names) if ``call`` is jax.jit(...), else None."""
+        if not self.is_jax_name(call.func, "jit"):
+            return None
+        pos: Tuple[int, ...] = ()
+        names: Tuple[str, ...] = ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                pos = self._donate_values(kw.value)
+            elif kw.arg == "donate_argnames":
+                vals = kw.value
+                if isinstance(vals, ast.Constant) and isinstance(vals.value, str):
+                    names = (vals.value,)
+                elif isinstance(vals, (ast.Tuple, ast.List)):
+                    names = tuple(
+                        e.value for e in vals.elts
+                        if isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    )
+        return pos, names
+
+    def _collect_jitted(self) -> None:
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Assign) or not isinstance(node.value, ast.Call):
+                continue
+            don = self.jit_donation(node.value)
+            if don is None:
+                continue
+            pos, names = don
+            for tgt in node.targets:
+                d = _dotted(tgt)
+                if d is None:
+                    continue
+                self.jitted[d] = _Jitted(d, pos, names)
+                # factory idiom: `fn = jax.jit(...)` inside a method that
+                # returns `fn` — register the factory so call sites like
+                # `self._rescore_verify_fn(r)(args...)` resolve donation
+                fn = self.enclosing_function(node)
+                if fn is not None and any(
+                    isinstance(r, ast.Return)
+                    and isinstance(r.value, ast.Name)
+                    and r.value.id == d
+                    for r in ast.walk(fn)
+                ):
+                    for key in (f"factory:{fn.name}", f"factory:self.{fn.name}"):
+                        self.jitted[key] = _Jitted(key, pos, names)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return cur  # type: ignore[return-value]
+            cur = self.parents.get(cur)
+        return None
+
+    def enclosing_class(self, node: ast.AST) -> Optional[str]:
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, ast.ClassDef):
+                return cur.name
+            cur = self.parents.get(cur)
+        return None
+
+    # ------------------------------------------------------------ call graph
+    def call_targets(self, call: ast.Call) -> List[str]:
+        """Candidate fully-qualified callees for a call node (plus any
+        function-reference arguments — bodies passed into scans/partials
+        count as called for reachability)."""
+        out: List[str] = []
+        refs = [call.func] + [
+            a for a in call.args if isinstance(a, (ast.Name, ast.Attribute))
+        ]
+        for i, f in enumerate(refs):
+            d = _dotted(f)
+            if not d:
+                continue
+            parts = d.split(".")
+            if parts[0] == "self":
+                cls = self.enclosing_class(call)
+                if cls:
+                    out.append(f"{self.name}.{cls}.{parts[-1]}")
+                continue
+            if i == 0 and d in self.sym_alias:
+                out.append(self.sym_alias[d])
+            if parts[0] in self.mod_alias and len(parts) > 1:
+                out.append(self.mod_alias[parts[0]] + "." + ".".join(parts[1:]))
+            # local / same-module function
+            out.append(f"{self.name}.{d}")
+            out.append(d)
+        return out
+
+
+class Linter:
+    def __init__(self, roots: Sequence[str] = DEFAULT_ROOTS):
+        self.roots = tuple(roots)
+        self.modules: List[_Module] = []
+        self.findings: List[Finding] = []
+        # fq function name -> (module, node)
+        self.index: Dict[str, Tuple[_Module, ast.FunctionDef]] = {}
+
+    # ------------------------------------------------------------- loading
+    @staticmethod
+    def _module_name(path: str) -> str:
+        norm = path.replace(os.sep, "/")
+        for anchor in ("/src/", "src/"):
+            if anchor in norm:
+                tail = norm.split(anchor, 1)[1]
+                return tail[:-3].replace("/", ".") if tail.endswith(".py") else tail
+        return os.path.splitext(os.path.basename(norm))[0]
+
+    def add_file(self, path: str) -> None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        mod = _Module(path, source, self._module_name(path))
+        self.modules.append(mod)
+        for q, node in mod.functions.items():
+            self.index[f"{mod.name}.{q}"] = (mod, node)
+
+    def add_paths(self, paths: Iterable[str]) -> None:
+        for p in paths:
+            if os.path.isdir(p):
+                for dirpath, dirnames, filenames in os.walk(p):
+                    dirnames[:] = [
+                        d for d in dirnames
+                        if d not in ("__pycache__", "results", ".git")
+                    ]
+                    for fn in sorted(filenames):
+                        if fn.endswith(".py"):
+                            self.add_file(os.path.join(dirpath, fn))
+            elif p.endswith(".py"):
+                self.add_file(p)
+
+    # --------------------------------------------------------- reachability
+    def _is_root(self, fq: str) -> bool:
+        leaf = fq.rsplit(".", 1)[-1]
+        return any(leaf == r or leaf.startswith(r) for r in self.roots)
+
+    def reachable_functions(self) -> Set[str]:
+        work = [fq for fq in self.index if self._is_root(fq)]
+        seen: Set[str] = set(work)
+        while work:
+            fq = work.pop()
+            mod, node = self.index[fq]
+            for call in ast.walk(node):
+                if not isinstance(call, ast.Call):
+                    continue
+                for cand in mod.call_targets(call):
+                    for key in (cand, f"{mod.name}.{cand}"):
+                        if key in self.index and key not in seen:
+                            seen.add(key)
+                            work.append(key)
+        return seen
+
+    # -------------------------------------------------------------- running
+    def run(self) -> List[Finding]:
+        reachable = self.reachable_functions()
+        # a nested function is scanned as part of its parent — drop children
+        # whose parent is already in the set so findings aren't doubled
+        tops = {
+            fq for fq in reachable
+            if fq.rsplit(".", 1)[0] not in reachable
+        }
+        for mod in self.modules:
+            self._check_repro002(mod)
+            self._check_repro003(mod)
+            self._check_repro004(mod)
+            self._check_repro005(mod)
+        for fq in sorted(tops):
+            mod, node = self.index[fq]
+            self._check_repro001(mod, node, fq)
+        return self._apply_waivers()
+
+    def _emit(self, mod: _Module, node: ast.AST, rule: str, msg: str) -> None:
+        self.findings.append(
+            Finding(mod.path, getattr(node, "lineno", 0),
+                    getattr(node, "col_offset", 0), rule, msg)
+        )
+
+    # ------------------------------------------------------------- REPRO001
+    def _check_repro001(self, mod: _Module, fn: ast.FunctionDef, fq: str) -> None:
+        where = f"reachable from round/scan roots via {fq.rsplit('.', 1)[-1]}"
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "item" and not node.args:
+                self._emit(mod, node, "REPRO001",
+                           f".item() forces a host sync ({where})")
+            elif isinstance(f, ast.Attribute) and f.attr == "block_until_ready":
+                self._emit(mod, node, "REPRO001",
+                           f"block_until_ready stalls the dispatch pipeline ({where})")
+            elif mod.is_jax_name(f, "device_get"):
+                self._emit(mod, node, "REPRO001",
+                           f"jax.device_get copies device->host ({where})")
+            elif mod.is_numpy(f):
+                d = _dotted(f) or ""
+                if d.rsplit(".", 1)[-1] in _NUMPY_HOST_FNS:
+                    self._emit(
+                        mod, node, "REPRO001",
+                        f"{d}() materializes a device value on host ({where})",
+                    )
+            elif (
+                isinstance(f, ast.Name)
+                and f.id in ("float", "int", "bool")
+                and node.args
+                and self._devicey_arg(mod, node.args[0])
+            ):
+                self._emit(
+                    mod, node, "REPRO001",
+                    f"{f.id}() on a device value forces a host sync ({where})",
+                )
+
+    @staticmethod
+    def _devicey_arg(mod: _Module, arg: ast.AST) -> bool:
+        """Heuristic: indexed values and jnp/jax call results are (likely)
+        device arrays; names/attributes/arithmetic are config scalars."""
+        if isinstance(arg, ast.Subscript):
+            return True
+        if isinstance(arg, ast.Call):
+            d = _dotted(arg.func) or ""
+            base = d.split(".")[0]
+            fq = mod.mod_alias.get(base, base)
+            return fq.startswith("jax") or base in ("jnp", "lax")
+        return False
+
+    # ------------------------------------------------------------- REPRO002
+    def _check_repro002(self, mod: _Module) -> None:
+        if not mod.jitted:
+            return
+        for fn in mod.functions.values():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                jit = self._donating_callee(mod, node)
+                if jit is None:
+                    continue
+                donated = [
+                    node.args[i] for i in jit.donate_pos if i < len(node.args)
+                ] + [
+                    kw.value for kw in node.keywords
+                    if kw.arg in jit.donate_names
+                ]
+                for expr in donated:
+                    d = _dotted(expr)
+                    if d is None:
+                        continue
+                    read = self._read_after(mod, fn, node, d)
+                    if read is not None:
+                        self._emit(
+                            mod, read, "REPRO002",
+                            f"'{d}' is read after being donated to "
+                            f"{_dotted(node.func) or 'a jitted call'}() — the "
+                            "buffer may already be aliased by its outputs",
+                        )
+
+    @staticmethod
+    def _donating_callee(mod: _Module, call: ast.Call) -> Optional[_Jitted]:
+        d = _dotted(call.func)
+        if d is not None:
+            jit = mod.jitted.get(d)
+            if jit is not None and (jit.donate_pos or jit.donate_names):
+                return jit
+        # factory: self._fn(level)(args...) / direct jax.jit(f, ...)(args...)
+        if isinstance(call.func, ast.Call):
+            inner = call.func
+            don = mod.jit_donation(inner)
+            if don is not None and (don[0] or don[1]):
+                return _Jitted("<inline jit>", don[0], don[1])
+            di = _dotted(inner.func)
+            if di is not None:
+                jit = mod.jitted.get(f"factory:{di}")
+                if jit is not None and (jit.donate_pos or jit.donate_names):
+                    return jit
+        return None
+
+    def _read_after(
+        self, mod: _Module, fn: ast.FunctionDef, call: ast.Call, expr: str
+    ) -> Optional[ast.AST]:
+        """First Load of ``expr`` after the statement containing ``call``,
+        stopping at the first re-assignment. Walks out of enclosing If/With
+        blocks (skipping the sibling branch) but NOT back around loops."""
+        stmt = self._enclosing_stmt(mod, call)
+        if stmt is None:
+            return None
+        if self._stmt_stores(stmt, expr):
+            return None      # result rebinds the donated name in-place
+        for later in self._statements_after(mod, stmt):
+            hit = self._first_load(later, expr)
+            stored = self._stmt_stores(later, expr)
+            if stored and hit is None:
+                return None
+            if hit is not None:
+                return hit
+        return None
+
+    def _enclosing_stmt(self, mod: _Module, node: ast.AST) -> Optional[ast.stmt]:
+        cur: Optional[ast.AST] = node
+        while cur is not None and not isinstance(cur, ast.stmt):
+            cur = mod.parents.get(cur)
+        return cur  # type: ignore[return-value]
+
+    def _statements_after(self, mod: _Module, stmt: ast.stmt):
+        cur: ast.AST = stmt
+        while True:
+            parent = mod.parents.get(cur)
+            if parent is None:
+                return
+            for field in ("body", "orelse", "finalbody"):
+                block = getattr(parent, field, None)
+                if isinstance(block, list) and cur in block:
+                    idx = block.index(cur)
+                    for later in block[idx + 1:]:
+                        yield later
+                    break
+            if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return
+            cur = parent
+
+    @staticmethod
+    def _stmt_stores(stmt: ast.stmt, expr: str) -> bool:
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        flat: List[ast.AST] = []
+        for t in targets:
+            flat.extend(t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t])
+        return any(_dotted(t) == expr for t in flat)
+
+    @staticmethod
+    def _first_load(stmt: ast.stmt, expr: str) -> Optional[ast.AST]:
+        # exclude the assignment-target occurrence itself
+        skip: Set[ast.AST] = set()
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for n in ast.walk(t):
+                    skip.add(n)
+        for node in ast.walk(stmt):
+            if node in skip:
+                continue
+            if isinstance(node, (ast.Name, ast.Attribute)) and _dotted(node) == expr:
+                if isinstance(getattr(node, "ctx", None), ast.Load):
+                    return node
+        return None
+
+    # ------------------------------------------------------------- REPRO003
+    def _check_repro003(self, mod: _Module) -> None:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and mod.is_jax_name(node.func, "jit")):
+                continue
+            # (a) jit constructed inside a for/while loop
+            cur = mod.parents.get(node)
+            immediately_called = isinstance(cur, ast.Call) and cur.func is node
+            while cur is not None:
+                if isinstance(cur, (ast.For, ast.While)):
+                    self._emit(
+                        mod, node, "REPRO003",
+                        "jax.jit constructed inside a loop — a fresh "
+                        "executable (and retrace) per iteration; hoist or "
+                        "memoize it",
+                    )
+                    break
+                if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    break
+                cur = mod.parents.get(cur)
+            # (b) construct-and-call inside a function body
+            if immediately_called and mod.enclosing_function(node) is not None:
+                self._emit(
+                    mod, node, "REPRO003",
+                    "jax.jit(...)(...) constructed and called in one "
+                    "expression — recompiles on every invocation; bind the "
+                    "jitted callable once",
+                )
+
+    # ------------------------------------------------------------- REPRO004
+    def _body_functions(self, mod: _Module, call: ast.Call) -> List[ast.AST]:
+        d = _dotted(call.func) or ""
+        base = d.split(".")[0]
+        fq = mod.mod_alias.get(base, base) + d[len(base):]
+        leaf = d.rsplit(".", 1)[-1]
+        if leaf not in _LAX_BODY_FNS or "lax" not in fq:
+            return []
+        out: List[ast.AST] = []
+        for i in _LAX_BODY_FNS[leaf]:
+            if i >= len(call.args):
+                continue
+            arg = call.args[i]
+            if isinstance(arg, ast.Lambda):
+                out.append(arg)
+            elif isinstance(arg, ast.Name):
+                fn = self._resolve_local_function(mod, call, arg.id)
+                if fn is not None:
+                    out.append(fn)
+        return out
+
+    def _resolve_local_function(
+        self, mod: _Module, at: ast.AST, name: str
+    ) -> Optional[ast.FunctionDef]:
+        """Find ``def name`` in the scopes enclosing ``at`` (innermost
+        first), falling back to module level."""
+        encl = mod.enclosing_function(at)
+        chain: List[str] = []
+        cur: Optional[ast.AST] = encl
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                chain.append(cur.name)
+            cur = mod.parents.get(cur)
+        chain.reverse()
+        for depth in range(len(chain), -1, -1):
+            q = ".".join(chain[:depth] + [name])
+            if q in mod.functions:
+                return mod.functions[q]
+        return None
+
+    def _check_repro004(self, mod: _Module) -> None:
+        for call in ast.walk(mod.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            for body in self._body_functions(mod, call):
+                self._check_body_purity(mod, body)
+
+    def _check_body_purity(self, mod: _Module, body: ast.AST) -> None:
+        for node in ast.walk(body):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                self._emit(mod, node, "REPRO004",
+                           "global/nonlocal mutation inside a traced body")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                tgts = node.targets if isinstance(node, ast.Assign) else [node.target]
+                for t in tgts:
+                    d = _dotted(t) or _dotted(getattr(t, "value", None) or ast.Pass())
+                    if d and d.split(".")[0] == "self":
+                        self._emit(
+                            mod, node, "REPRO004",
+                            "mutating self state inside a traced body — the "
+                            "write happens once at trace time, not per step",
+                        )
+            elif isinstance(node, ast.Call):
+                f = node.func
+                d = _dotted(f) or ""
+                if isinstance(f, ast.Name) and f.id in ("print", "open", "input"):
+                    self._emit(mod, node, "REPRO004",
+                               f"{f.id}() is a host side effect inside a traced body")
+                elif d.split(".")[0] == "time" and mod.mod_alias.get("time", "time") == "time":
+                    self._emit(mod, node, "REPRO004",
+                               "time.* inside a traced body runs at trace time only")
+                elif mod.is_numpy(f) and d.rsplit(".", 1)[-1] in _NUMPY_HOST_FNS:
+                    self._emit(mod, node, "REPRO004",
+                               f"{d}() on a tracer fails or silently constant-folds")
+                elif isinstance(f, ast.Attribute) and f.attr == "item" and not node.args:
+                    self._emit(mod, node, "REPRO004",
+                               ".item() inside a traced body")
+
+    # ------------------------------------------------------------- REPRO005
+    def _check_repro005(self, mod: _Module) -> None:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func) or ""
+                if d == "time.time" and mod.mod_alias.get("time", "") == "time":
+                    self._emit(
+                        mod, node, "REPRO005",
+                        "time.time() is not monotonic — use time.perf_counter()",
+                    )
+        for fn in mod.functions.values():
+            self._check_unsynced_timing(mod, fn)
+
+    def _check_unsynced_timing(self, mod: _Module, fn: ast.FunctionDef) -> None:
+        starts: Dict[str, int] = {}
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and (_dotted(node.value.func) or "") == "time.perf_counter"
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+            ):
+                starts.setdefault(node.targets[0].id, node.lineno)
+        if not starts:
+            return
+        deltas: List[Tuple[str, int, ast.AST]] = []
+        for node in ast.walk(fn):
+            if (
+                isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Sub)
+                and isinstance(node.left, ast.Call)
+                and (_dotted(node.left.func) or "") == "time.perf_counter"
+                and isinstance(node.right, ast.Name)
+                and node.right.id in starts
+            ):
+                deltas.append((node.right.id, node.lineno, node))
+        for var, end_line, dnode in deltas:
+            start_line = starts[var]
+            if end_line <= start_line:
+                continue
+            jit_call = None
+            synced = False
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                line = getattr(node, "lineno", 0)
+                if not (start_line <= line <= end_line):
+                    continue
+                f = node.func
+                if (isinstance(f, ast.Attribute) and f.attr == "block_until_ready") or \
+                        mod.is_jax_name(f, "block_until_ready"):
+                    synced = True
+                # materializing on host blocks on the device value too
+                if isinstance(f, ast.Attribute) and f.attr == "item" and not node.args:
+                    synced = True
+                if mod.is_numpy(f) and (
+                    (_dotted(f) or "").rsplit(".", 1)[-1] in ("asarray", "array")
+                ):
+                    synced = True
+                d = _dotted(f)
+                if d is not None and (
+                    d in mod.jitted or f"factory:{d}" in mod.jitted
+                ):
+                    jit_call = d
+                if isinstance(f, ast.Call):
+                    di = _dotted(f.func)
+                    if di is not None and f"factory:{di}" in mod.jitted:
+                        jit_call = di
+            if jit_call is not None and not synced:
+                self._emit(
+                    mod, dnode, "REPRO005",
+                    f"perf_counter delta times jitted '{jit_call}' without a "
+                    "block_until_ready — async dispatch returns before the "
+                    "device work finishes",
+                )
+
+    # -------------------------------------------------------------- waivers
+    def _apply_waivers(self) -> List[Finding]:
+        out: List[Finding] = []
+        waived: Dict[Tuple[str, int], Tuple[str, str, bool]] = {}
+        for mod in self.modules:
+            for i, line in enumerate(mod.source_lines, start=1):
+                m = _WAIVER_RE.search(line)
+                if m:
+                    rule, why = m.group(1), m.group(2).strip()
+                    waived[(mod.path, i)] = (rule, why, bool(why))
+                    if not why:
+                        out.append(Finding(
+                            mod.path, i, 0, "REPRO000",
+                            f"waiver for {rule} has no justification — "
+                            "explain why the finding is safe here",
+                        ))
+        for f in self.findings:
+            w = waived.get((f.path, f.line))
+            if w is not None and w[0] == f.rule and w[2]:
+                continue
+            out.append(f)
+        return sorted(out, key=lambda f: (f.path, f.line, f.rule))
+
+
+def run_paths(paths: Sequence[str], roots: Optional[Sequence[str]] = None) -> List[Finding]:
+    linter = Linter(roots=tuple(roots) if roots else DEFAULT_ROOTS)
+    linter.add_paths(paths)
+    return linter.run()
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Dispatch-discipline lint (REPRO001-005) over JAX code.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--roots", default=None,
+                    help="comma-separated extra root function names for the "
+                         "REPRO001 call-graph walk")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rule, desc in sorted(RULES.items()):
+            print(f"{rule}  {desc}")
+        return 0
+    roots = list(DEFAULT_ROOTS)
+    if args.roots:
+        roots.extend(r.strip() for r in args.roots.split(",") if r.strip())
+    findings = run_paths(args.paths, roots=roots)
+    for f in findings:
+        print(f.render())
+    n = len(findings)
+    print(
+        f"repro-lint: {n} finding{'s' if n != 1 else ''} in "
+        f"{', '.join(args.paths)}",
+        file=sys.stderr,
+    )
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -242,7 +242,8 @@ def tree_draft_scan(
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
     draft_kv: str = "recompute",      # "recompute" | "carry" (static)
     dynamic_steps: bool = False,      # trip count = max per-slot limit, on device
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array,
+           jax.Array]:
     """Fused DyTC tree growth: one ``lax.scan`` over expansion steps (§4.2).
 
     The batched, on-device analogue of ``DyTCScheduler.build_tree``. Each
@@ -1065,7 +1066,7 @@ class SpecEngine:
             self._prefill_fn(self.params, {"tokens": jnp.asarray(prompt[None])}, self.cache)
         )
         self.costs.observe_target(time.perf_counter() - t0, tokens=max(len(prompt), 1))
-        self.tokens = list(map(int, prompt))
+        self.tokens = [int(t) for t in prompt]
         self.pending = int(np.argmax(np.asarray(last)[0]))
 
     @property

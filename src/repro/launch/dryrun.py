@@ -20,6 +20,7 @@ import json
 import sys
 import time
 import traceback
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -241,7 +242,7 @@ def applicable(cfg, shape) -> bool:
 
 
 # ----------------------------------------------------------------- runner
-def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str = None,
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Optional[str] = None,
             verbose: bool = True) -> dict:
     import dataclasses
 
@@ -259,14 +260,14 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str = None,
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": "full-attention arch at 500k (see DESIGN.md)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     # set_mesh (not `with mesh:`) so with_sharding_constraint sees the
     # abstract mesh during tracing (models.shard_utils.constrain).
     set_global_mesh(mesh)
     fn, args, traffic = BUILDERS[shape.kind](cfg, shape, mesh)
     lowered = fn.lower(*args)
     compiled = lowered.compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     name = f"{arch}/{shape_name}/{'2pod' if multi_pod else '1pod'}"
     rep = analyze_compiled(name, compiled, analytic_bytes=traffic)
     mem = compiled.memory_analysis()

@@ -106,7 +106,7 @@ from __future__ import annotations
 import functools
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -341,9 +341,9 @@ class BatchedSpecServer:
         ), donate_argnums=don(1))
         self._round_fn = None
         if self.round_mode == "single":
-            pld_kw = dict(
-                max_ngram=self.pld.max_ngram, min_ngram=self.pld.min_ngram
-            )
+            pld_kw = {
+                "max_ngram": self.pld.max_ngram, "min_ngram": self.pld.min_ngram,
+            }
             if mode == "chain_fused":
                 fn = functools.partial(
                     chain_round, cfg, draft_k=draft_k,
@@ -366,11 +366,11 @@ class BatchedSpecServer:
             # the state updates alias in place instead of copying the
             # largest live buffers every round
             self._round_fn = jax.jit(fn, donate_argnums=don(1, 2))
-        self._rescore_verify_fns: Dict[int, callable] = {}
-        self._draft_fns: Dict[int, callable] = {}   # scan steps -> jitted fn
-        self._tree_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
-        self._casc_draft_fns: Dict[int, callable] = {}   # expansions -> jitted fn
-        self._rescore_fns: Dict[int, callable] = {}      # level index -> jitted fn
+        self._rescore_verify_fns: Dict[int, Callable] = {}
+        self._draft_fns: Dict[int, Callable] = {}   # scan steps -> jitted fn
+        self._tree_draft_fns: Dict[int, Callable] = {}   # expansions -> jitted fn
+        self._casc_draft_fns: Dict[int, Callable] = {}   # expansions -> jitted fn
+        self._rescore_fns: Dict[int, Callable] = {}      # level index -> jitted fn
         self._gates = (
             None
             if draft_spec is None
@@ -422,7 +422,7 @@ class BatchedSpecServer:
         self.dstate = self._admit_fn(self.dstate, slot_d, jnp.asarray(row), last)
         # host mirrors (split/legacy/cascade rounds + inspection)
         self.pending[slot] = int(np.argmax(np.asarray(last)[0]))
-        self.contexts[slot] = list(map(int, prompt))
+        self.contexts[slot] = [int(t) for t in prompt]
         self.live[slot] = True
         # slot estimators restart with the draft's cold-start prior —
         # continuous batching reuses slots across unrelated requests
@@ -562,6 +562,109 @@ class BatchedSpecServer:
             )
             self._rescore_verify_fns[level] = fn
         return fn
+
+    # ------------------------------------------------- dispatch contracts
+    def expected_dispatches_per_round(self) -> int:
+        """Jitted dispatches a fully-drafting steady-state round performs —
+        the static claim the runtime ``round_dispatches``/
+        ``draft_dispatches``/``rescore_dispatches`` counters and the
+        compiled contracts (``analysis.contracts``) are both held to.
+
+        single:  1 (THE fused round executable)
+        split:   2 (draft scan + verify), 1 with no neural drafter
+        legacy:  draft_k decode dispatches + 1 verify
+        cascade: L = 1 drafting scan + (L-1) rescores, target verify folded
+                 into the last rescore (the paper's <= L+1 bound, met with
+                 room to spare); a 1-level bank is drafting scan + verify.
+        """
+        if self.round_mode == "single":
+            return 1
+        if self.mode == "legacy":
+            return (self.k if self.draft_spec is not None else 0) + 1
+        if self.mode == "cascade_fused":
+            return max(len(self.bank), 2)
+        return 2 if self.draft_spec is not None else 1
+
+    def round_executables(self) -> Dict[str, Tuple[Callable, tuple]]:
+        """Every jitted executable a steady-state round dispatches, as
+        ``{name: (jitted_fn, example_args)}`` ready for ``.lower()`` —
+        the input ``analysis.contracts.server_round_contracts`` compiles
+        and checks. Example args mirror the live call sites (lowering never
+        executes, so handing over donated buffers is safe)."""
+        B, k = self.B, self.k
+        toks_i = jnp.zeros((B,), jnp.int32)
+        chains = jnp.zeros((B, k), jnp.int32)
+        live = jnp.zeros((B,), bool)
+        if self.round_mode == "single":
+            return {"round": (self._round_fn, (
+                self.params, self.cache, self.dstate, self._c_dev, self._gates
+            ))}
+        if self.mode == "legacy":
+            out = {"decode": (self._decode, (
+                self.params, self.cache, jnp.zeros((B, 1), jnp.int32),
+                self._gates,
+            ))}
+            out["verify"] = (self._verify, (
+                self.params, self.cache, toks_i, chains, toks_i, live,
+            ))
+            return out
+        if self.mode == "chain_fused":
+            out = {}
+            if self.draft_spec is not None:
+                out["chain_draft"] = (self._draft_fn(k), (
+                    self.params, self.cache, toks_i, chains, toks_i,
+                    jnp.full((B,), k, jnp.int32), self._gates,
+                ))
+            out["verify"] = (self._verify, (
+                self.params, self.cache, toks_i, chains, toks_i, live,
+            ))
+            return out
+        # tree_fused / cascade_fused (split): a seeded padded tree
+        from repro.core.tree import tree_seed_arrays as _seed
+
+        seed = _seed(np.zeros(B, np.int32), np.zeros((B, k), np.int32),
+                     np.zeros(B, np.int32), self.tree_bucket, pld_alpha=0.5)
+        tree = tuple(jnp.asarray(a) for a in seed)
+        tok, par, dep, pac, msk, cnt = tree
+        scal = (jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
+                jnp.asarray(0.5, jnp.float32),
+                jnp.asarray(self.t_min, jnp.float32))
+        if self.mode == "tree_fused":
+            out = {}
+            if self.draft_spec is not None:
+                out["tree_draft"] = (
+                    self._tree_draft_fn(self.tree_expansions),
+                    (self.params, self.cache) + tree + scal + (self._gates,),
+                )
+            out["tree_verify"] = (self._tree_verify, (
+                self.params, self.cache, tok, par, dep, msk, cnt, live,
+            ))
+            return out
+        bank = self.bank
+        probe = jnp.full((B,), -1, jnp.int32)
+        apply = jnp.zeros((B,), bool)
+        alphas = jnp.full((B,), 0.5, jnp.float32)
+        out = {"cascade_draft": (
+            self._casc_draft_fn(self.tree_expansions),
+            (bank.drafter.params, self.cache) + tree + scal
+            + (self._level_gates[bank.drafter.index],),
+        )}
+        if bank.rescorers:
+            for lvl in bank.rescorers[:-1]:
+                out[f"rescore_l{lvl.index}"] = (self._rescore_fn(lvl.index), (
+                    lvl.params, self.cache) + tree
+                    + (probe, apply, alphas, self._level_gates[lvl.index]),
+                )
+            last = bank.rescorers[-1]
+            out["rescore_verify"] = (self._rescore_verify_fn(last.index), (
+                last.params, self.params, self.cache) + tree
+                + (probe, apply, alphas, self._level_gates[last.index], live),
+            )
+        else:
+            out["tree_verify"] = (self._tree_verify, (
+                self.params, self.cache, tok, par, dep, msk, cnt, live,
+            ))
+        return out
 
     # ------------------------------------------------------------- stepping
     def _pld_chains(self):

@@ -1,0 +1,24 @@
+"""Fixture: host-sync hazards reachable from a round root (REPRO001).
+
+`chain_round` is a lint root by name; the hazards live two call-graph hops
+down so the test also exercises the reachability walk."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaf_helper(x):
+    n = x.item()                      # REPRO001: .item() host sync
+    arr = np.asarray(x)               # REPRO001: host materialization
+    return n + int(arr[0])            # REPRO001: int() on indexed value
+
+
+def mid_helper(x):
+    jax.block_until_ready(x)          # REPRO001: pipeline stall
+    return leaf_helper(x)
+
+
+def chain_round(params, cache, toks):
+    y = jnp.cumsum(toks)
+    f = float(jnp.max(y))             # REPRO001: float() on jnp result
+    return mid_helper(y), f

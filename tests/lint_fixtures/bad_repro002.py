@@ -1,0 +1,24 @@
+"""Fixture: use-after-donate (REPRO002).
+
+`step_bad` reads `cache` after handing it to a call whose argument
+position 1 is donated; `step_ok` rebinds it in the same statement (the
+pattern the server uses) and must NOT be flagged."""
+import jax
+
+
+def _round(params, cache, state):
+    return cache, state
+
+
+round_fn = jax.jit(_round, donate_argnums=(1, 2))
+
+
+def step_bad(params, cache, state):
+    new_cache, new_state = round_fn(params, cache, state)
+    leak = cache["pos"]               # REPRO002: cache was donated above
+    return new_cache, new_state, leak
+
+
+def step_ok(params, cache, state):
+    cache, state = round_fn(params, cache, state)
+    return cache, state, cache["pos"]     # fine: rebound by the call itself

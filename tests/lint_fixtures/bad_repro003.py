@@ -1,0 +1,16 @@
+"""Fixture: recompilation hazards (REPRO003)."""
+import jax
+import jax.numpy as jnp
+
+
+def serve_loop(params, batches):
+    outs = []
+    for b in batches:
+        fn = jax.jit(lambda p, x: jnp.dot(p, x))   # REPRO003: jit in loop
+        outs.append(fn(params, b))
+    return outs
+
+
+def one_shot(params, x):
+    # REPRO003: constructed-and-called — a fresh executable every call
+    return jax.jit(lambda p, v: p @ v)(params, x)

@@ -1,0 +1,28 @@
+"""Fixture: impure scan/while/cond bodies (REPRO004)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Tracker:
+    def run(self, xs):
+        def body(carry, x):
+            print("step", x)                  # REPRO004: host side effect
+            self.count = self.count + 1       # REPRO004: self mutation
+            t = time.perf_counter()           # REPRO004: trace-time only
+            h = np.asarray(x)                 # REPRO004: numpy on a tracer
+            return carry + x, (t, h)
+
+        return jax.lax.scan(body, jnp.zeros(()), xs)
+
+    def spin(self, x):
+        def cond(c):
+            return c[0] < 4
+
+        def step(c):
+            global COUNTER                    # REPRO004: global mutation
+            return (c[0] + 1, c[1].item())    # REPRO004: .item() on tracer
+
+        return jax.lax.while_loop(cond, step, (0, x))

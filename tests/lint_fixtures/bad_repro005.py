@@ -1,0 +1,27 @@
+"""Fixture: timing hygiene (REPRO005)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+decode = jax.jit(lambda p, x: jnp.dot(p, x))
+
+
+def bench_wall_clock(params, x):
+    t0 = time.time()                          # REPRO005: non-monotonic clock
+    y = decode(params, x)
+    return y, time.time() - t0                # REPRO005 (same)
+
+
+def bench_unsynced(params, x):
+    t0 = time.perf_counter()
+    y = decode(params, x)
+    dt = time.perf_counter() - t0             # REPRO005: no block_until_ready
+    return y, dt
+
+
+def bench_ok(params, x):
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(decode(params, x))
+    dt = time.perf_counter() - t0             # fine: device work settled
+    return y, dt

@@ -1,0 +1,20 @@
+"""Fixture: waiver syntax. One justified waiver (silenced), one bare waiver
+(reported as REPRO000), one unrelated-rule waiver (finding still reported)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+decode = jax.jit(lambda p, x: jnp.dot(p, x))
+
+
+def startup_banner():
+    return time.time()  # repro: noqa-REPRO005: wall-clock wanted for log timestamps
+
+
+def bare_waiver():
+    return time.time()  # repro: noqa-REPRO005
+
+
+def wrong_rule():
+    return time.time()  # repro: noqa-REPRO001: misattributed waiver

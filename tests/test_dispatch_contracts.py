@@ -1,0 +1,200 @@
+"""Compiled-HLO dispatch contracts for all four server modes
+(``analysis.contracts`` over ``BatchedSpecServer.round_executables``):
+
+  - chain/tree single rounds are exactly ONE executable, with the donated
+    cache + carried state lowered to real ``input_output_alias`` entries
+    and the draft/expansion scans surviving at their known trip counts;
+  - the cascade round stays within L executables (<= L+1 bound of §4.1);
+  - NO executable of any round re-enters the host (callbacks, infeed/
+    outfeed) — and a round body with a deliberately injected host sync
+    FAILS the checker;
+  - the static executable counts agree with the runtime
+    ``round_dispatches``/``draft_dispatches``/``rescore_dispatches``
+    counters, so the compiled claims and the observed counters can't
+    drift apart.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import (
+    ContractViolation,
+    HloContract,
+    server_round_contracts,
+)
+from repro.config import get_config
+from repro.core.dsia import layer_sparsity
+from repro.models import model as M
+from repro.serving.server import BatchedSpecServer
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+SPEC = layer_sparsity(CFG, 0.5)
+DRAFT_K = 4
+EXPANSIONS = 5
+
+
+def _server(mode, **kw):
+    kwargs = dict(max_batch=2, max_len=128, draft_k=DRAFT_K,
+                  tree_expansions=EXPANSIONS, adaptive=False, donate=True)
+    if mode != "cascade_fused":
+        kwargs["draft_spec"] = SPEC
+    kwargs.update(kw)
+    return BatchedSpecServer(CFG, PARAMS, mode=mode, **kwargs)
+
+
+# --------------------------------------------------- single-dispatch rounds
+@pytest.mark.parametrize("mode,trip", [("chain_fused", DRAFT_K),
+                                       ("tree_fused", EXPANSIONS)])
+def test_single_round_is_one_donated_executable(mode, trip):
+    """THE tentpole contract: a single-mode round is ONE executable whose
+    donated cache/state lowered to real aliasing, whose draft scan kept its
+    trip count, and whose body never re-enters the host."""
+    srv = _server(mode, round_mode="single")
+    cons = server_round_contracts(srv)
+    assert srv.expected_dispatches_per_round() == 1
+    assert set(cons) == {"round"}
+    con = cons["round"]
+    # cache + dstate donation became input_output_alias entries (one per
+    # donated leaf — at minimum the KV segments, pos, and carried state)
+    con.assert_donated(at_least=3)
+    con.assert_no_host_callbacks()
+    con.assert_trip_count(trip)                # the fused draft scan
+    con.assert_trip_count(CFG.num_layers)      # the layer-stack scan
+
+
+@pytest.mark.parametrize("mode", ["chain_fused", "tree_fused"])
+def test_single_round_donation_off_is_alias_free(mode):
+    """Negative control: donate=False must lower WITHOUT aliasing — the
+    checker distinguishes real donation from its absence."""
+    srv = _server(mode, round_mode="single", donate=False)
+    server_round_contracts(srv)["round"].assert_not_donated()
+
+
+# ------------------------------------------------------------- split rounds
+def test_split_round_contracts():
+    srv = _server("chain_fused", round_mode="split")
+    cons = server_round_contracts(srv)
+    assert len(cons) == srv.expected_dispatches_per_round() == 2
+    cons["chain_draft"].assert_no_host_callbacks().assert_trip_count(DRAFT_K)
+    cons["verify"].assert_donated(at_least=1).assert_no_host_callbacks()
+
+
+def test_legacy_round_contracts():
+    srv = _server("legacy")
+    cons = server_round_contracts(srv)
+    # legacy re-dispatches ONE decode executable per draft step: distinct
+    # executables stay at 2 while dispatches/round go to draft_k + 1
+    assert srv.expected_dispatches_per_round() == DRAFT_K + 1
+    assert len(cons) == 2
+    for con in cons.values():
+        con.assert_no_host_callbacks()
+
+
+# ----------------------------------------------------------- cascade rounds
+def test_cascade_round_within_levels_plus_one():
+    srv = _server("cascade_fused")
+    L = len(srv.bank)
+    assert L >= 2
+    cons = server_round_contracts(srv)
+    assert len(cons) == srv.expected_dispatches_per_round() == max(L, 2)
+    assert len(cons) <= L + 1                  # the §4.1 dispatch bound
+    for con in cons.values():
+        con.assert_no_host_callbacks()
+    # the LAST rescore carries the folded target verify + donated commit
+    cons["rescore_verify"].assert_donated(at_least=1)
+    cons["cascade_draft"].assert_not_donated()
+    cons["cascade_draft"].assert_trip_count(EXPANSIONS)
+
+
+# ---------------------------------------------- injected host sync must fail
+def test_injected_host_sync_fails_contract():
+    """The acceptance gate: fold a deliberate host re-entry into the round
+    body — the SAME lowering pipeline must now flunk the checker."""
+    srv = _server("chain_fused", round_mode="single")
+    inner = srv._round_fn.__wrapped__           # the un-jitted round body
+    _, args = srv.round_executables()["round"]
+
+    def leaky(params, cache, dstate, c, gates):
+        cache, dstate, out = inner(params, cache, dstate, c, gates)
+        jax.debug.print("n_acc={n}", n=out["n_acc"])   # deliberate host sync
+        return cache, dstate, out
+
+    con = HloContract.from_jitted(jax.jit(leaky), *args, name="leaky-round")
+    assert con.host_callbacks                    # the callback IS in the HLO
+    with pytest.raises(ContractViolation, match="callback"):
+        con.assert_no_host_callbacks()
+
+    def leaky2(params, cache, dstate, c, gates):
+        cache, dstate, out = inner(params, cache, dstate, c, gates)
+        n = jax.pure_callback(
+            lambda x: np.asarray(x), jax.ShapeDtypeStruct((2,), jnp.int32),
+            out["n_acc"],
+        )
+        return cache, dstate, dict(out, n_acc=n)
+
+    con2 = HloContract.from_jitted(jax.jit(leaky2), *args, name="leaky2")
+    with pytest.raises(ContractViolation):
+        con2.assert_no_host_callbacks()
+
+
+# ------------------------------------------- static vs runtime cross-check
+def test_static_contract_matches_runtime_counters():
+    """The compiled executable count and the runtime dispatch counters
+    must tell the same story (per round, after warm-up)."""
+    srv = _server("chain_fused", round_mode="single", sync_every=2)
+    n = srv.expected_dispatches_per_round()
+    assert len(server_round_contracts(srv)) == n == 1
+    for i, p in enumerate([np.array([5, 6, 7, 8] * 4, np.int32),
+                           np.array([9, 10, 11] * 5, np.int32)]):
+        srv.add_request(i, p)
+    rounds = 4
+    for _ in range(rounds):
+        srv.step()
+    srv.flush()
+    assert srv.stats["round_dispatches"] == rounds * n
+    assert srv.stats["host_syncs"] == rounds // 2   # sync_every=2 drains only
+    if hasattr(srv._round_fn, "_cache_size"):
+        assert srv._round_fn._cache_size() == 1
+
+
+def test_cascade_static_matches_runtime_counters():
+    srv = _server("cascade_fused")
+    n = srv.expected_dispatches_per_round()
+    assert len(server_round_contracts(srv)) == n
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        srv.add_request(i, rng.integers(4, CFG.vocab_size - 1,
+                                        size=24).astype(np.int32))
+    rounds = 3
+    for _ in range(rounds):
+        srv.step()
+    dispatches = (srv.stats["draft_dispatches"]
+                  + srv.stats["rescore_dispatches"])
+    assert dispatches == rounds * n
+    assert srv.stats["target_calls"] == rounds     # folded, still counted
+
+
+# -------------------------------------------------------- parser edge cases
+def test_alias_parser_handles_nested_tuple_indices():
+    """input_output_alias nests {tuple,index} braces inside the outer map —
+    a naive regex truncates at the first '}' and undercounts."""
+    hdr = ("HloModule jit_f, input_output_alias={ {0}: (1, {}, may-alias), "
+           "{1, 2}: (3, {0}, must-alias) }, entry_computation_layout=...")
+    con = HloContract("synthetic", hdr)
+    assert con.alias_count == 2
+    assert con.donated_params == (1, 3)
+    con.assert_donated(1, 3, at_least=2)
+
+
+def test_contract_assertions_raise_with_context():
+    con = HloContract("empty", "HloModule jit_f\nENTRY %main () -> f32[] {}")
+    with pytest.raises(ContractViolation, match=r"\[empty\].*donation"):
+        con.assert_donated()
+    with pytest.raises(ContractViolation, match="known_trip_count=7"):
+        con.assert_trip_count(7)
+    con.assert_not_donated().assert_no_host_callbacks()

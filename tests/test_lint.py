@@ -1,0 +1,124 @@
+"""The dispatch-discipline lint (``analysis.lint``): every REPRO00x rule
+must trip on its fixture snippet, the safe idioms in the fixtures must NOT
+be flagged, waivers need justifications, and — the self-scan gate — the
+repo's own ``src/repro`` tree must be clean."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.lint import DEFAULT_ROOTS, RULES, run_paths
+
+HERE = os.path.dirname(__file__)
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+SRC_REPRO = os.path.join(HERE, "..", "src", "repro")
+
+
+def _fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+def _rules_and_lines(findings):
+    return {(f.rule, f.line) for f in findings}
+
+
+# ------------------------------------------------------------ rule coverage
+@pytest.mark.parametrize("rule", ["REPRO001", "REPRO002", "REPRO003",
+                                  "REPRO004", "REPRO005"])
+def test_each_rule_trips_on_its_fixture(rule):
+    findings = run_paths([_fixture(f"bad_{rule.lower()}.py")])
+    assert findings, f"{rule} fixture produced no findings"
+    assert {f.rule for f in findings} == {rule}
+
+
+def test_repro001_reaches_through_the_call_graph():
+    """Hazards two hops below `chain_round` are found (the reachability
+    walk), and each finding names the function it was reached through."""
+    findings = run_paths([_fixture("bad_repro001.py")])
+    assert len(findings) == 5
+    assert any("leaf_helper" in f.msg for f in findings)
+    assert any(".item()" in f.msg for f in findings)
+
+
+def test_repro001_not_flagged_outside_reachable_set():
+    """The same hazards in a function NOT reachable from a root are not
+    REPRO001 findings — the rule is scoped to the round/scan hot paths."""
+    findings = run_paths([_fixture("bad_repro001.py")],
+                         roots=["nonexistent_root"])
+    assert not [f for f in findings if f.rule == "REPRO001"]
+
+
+def test_repro002_accepts_same_statement_rebind():
+    """`cache, state = round_fn(params, cache, state)` — the server's
+    donate idiom — must pass; reading the stale name afterwards must not."""
+    findings = run_paths([_fixture("bad_repro002.py")])
+    assert len(findings) == 1
+    assert findings[0].line == 18            # the read in step_bad only
+
+
+def test_repro004_catches_each_impurity():
+    findings = run_paths([_fixture("bad_repro004.py")])
+    msgs = " | ".join(f.msg for f in findings)
+    for needle in ("host side effect", "self state", "trace time",
+                   "tracer", "global/nonlocal", ".item()"):
+        assert needle in msgs, f"missing REPRO004 case: {needle}"
+
+
+def test_repro005_unsynced_timing_but_not_synced():
+    findings = run_paths([_fixture("bad_repro005.py")])
+    lines = _rules_and_lines(findings)
+    assert ("REPRO005", 19) in lines         # bench_unsynced delta
+    # bench_ok's block_until_ready-guarded delta is clean
+    assert not any(line > 20 for _, line in lines)
+
+
+# ------------------------------------------------------------------ waivers
+def test_waivers_require_justification():
+    findings = run_paths([_fixture("waived.py")])
+    rules = [f.rule for f in findings]
+    # justified waiver silenced its finding; bare waiver -> REPRO000 AND
+    # the finding stays; wrong-rule waiver does not silence anything
+    assert rules.count("REPRO000") == 1
+    assert rules.count("REPRO005") == 2
+    assert not any(f.line == 12 for f in findings)     # justified: silenced
+
+
+# ------------------------------------------------------------ self-scan gate
+def test_src_repro_is_clean():
+    """THE gate: the repo's own serving/engine/analysis tree passes its own
+    dispatch-discipline rules. A new host sync, use-after-donate, or
+    wall-clock timer in src/repro fails this test."""
+    findings = run_paths([SRC_REPRO])
+    assert not findings, "\n" + "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_exit_codes_and_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", SRC_REPRO],
+        capture_output=True, text=True, env=env,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint",
+         _fixture("bad_repro003.py")],
+        capture_output=True, text=True, env=env,
+    )
+    assert bad.returncode == 1
+    assert "REPRO003" in bad.stdout
+    listing = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--list-rules"],
+        capture_output=True, text=True, env=env,
+    )
+    assert listing.returncode == 0
+    for rule in RULES:
+        assert rule in listing.stdout
+
+
+def test_default_roots_cover_the_engine_entrypoints():
+    for root in ("chain_round", "tree_round", "cascade_rescore",
+                 "chain_draft_scan", "tree_draft_scan"):
+        assert root in DEFAULT_ROOTS
