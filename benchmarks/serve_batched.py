@@ -40,6 +40,15 @@ Three questions, one request stream:
      canary fails outside 0.999–1.001 — donation is pure aliasing and
      must never change tokens).
 
+  6. mesh-sharded round parity (docs/sharding.md): the same single-
+     dispatch chain round on a forced 8-device host mesh (``model=2,
+     data=4``) vs the single-device server — tokens/step must match
+     EXACTLY (sharding is placement, never sampling; the smoke canary
+     fails outside 0.999–1.001) with rounds/s reported as the
+     communication-overhead story (``serve/sharded_vs_single``; smoke
+     only, in a subprocess because the forced device count must precede
+     jax initialization).
+
 All variants are lossless (greedy output == AR), so tokens/step and round
 latency are the whole story.
 """
@@ -249,8 +258,12 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
     if single_speed < 1.15:
         print(f"WARNING: single-dispatch round below the 1.15x target "
               f"vs split ({single_speed:.3f})")
+    shard_parity = 1.0
+    if smoke:
+        shard_parity = _sharded_arm(out)
     if smoke and (ratio < 0.9 or c_ratio < 0.9
                   or not (0.97 <= kv_parity <= 1.03)
+                  or not (0.999 <= shard_parity <= 1.001)
                   or not (0.999 <= donate_parity <= 1.001)):
         # the canaries must be able to FAIL: tokens/step is deterministic
         # for a fixed stream/model (no timing noise), so a clear
@@ -263,11 +276,72 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
             f"smoke canary: accept ratio below 0.9 or a parity broken "
             f"(tree/chain {ratio:.3f}, cascade/tree {c_ratio:.3f}, "
             f"carry/recompute tps {kv_parity:.3f}, "
+            f"sharded/single tps {shard_parity:.4f}, "
             f"donated/nondonated tps {donate_parity:.4f})"
         )
         err.results = out
         raise err
     return out
+
+
+_SHARD_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import dataclasses, json, sys
+sys.path.insert(0, "benchmarks")
+from serve_batched import _serve_stream
+from common import CACHE_DIR, bench_config, task_prompts, trained_params
+from repro.launch.mesh import make_mesh_compat
+
+cfg = dataclasses.replace(bench_config(), num_layers=4)
+cfg, params = trained_params(cfg, steps=12, cache_dir=CACHE_DIR + "_smoke")
+prompts = [p for ps in task_prompts(cfg, 1).values() for p in ps][:4]
+mesh = make_mesh_compat((4, 2), ("data", "model"))
+out = {}
+for name, mesh_kw in (("single", {}), ("sharded", {"mesh": mesh})):
+    out[name] = _serve_stream(cfg, params, prompts, 8,
+                              mode="chain_fused", adaptive=False, **mesh_kw)
+print(json.dumps(out))
+"""
+
+
+def _sharded_arm(out: dict) -> float:
+    """Question 6: the sharded-vs-single round A/B, in a subprocess (the
+    forced host-device count must be set before jax initializes, and the
+    parent bench must keep seeing the real devices). Reuses the parent's
+    smoke model cache; both variants land in ``out`` with the
+    us_per_round/tokens_per_step keys ``trend.py`` records."""
+    import json
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), os.path.join(root, "benchmarks")]
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT], capture_output=True,
+        text=True, env=env, cwd=root, timeout=900,
+    )
+    if proc.returncode != 0:
+        print(f"WARNING: sharded arm subprocess failed:\n{proc.stderr[-2000:]}")
+        return 0.0                   # trips the smoke canary
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    sg, sh = res["single"], res["sharded"]
+    out["mesh_single_base"], out["mesh_sharded_n8"] = sg, sh
+    parity = sh["tokens_per_step"] / max(sg["tokens_per_step"], 1e-9)
+    overhead = sh["us_per_round"] / max(sg["us_per_round"], 1e-9)
+    print(csv_line(
+        "serve/sharded_vs_single", sh["us_per_round"],
+        f"tps_parity={parity:.4f};round_overhead={overhead:.3f};"
+        f"sharded_tps={sh['tokens_per_step']:.3f};"
+        f"single_tps={sg['tokens_per_step']:.3f}",
+    ))
+    out["sharded_tps_parity"] = parity
+    out["sharded_round_overhead"] = overhead
+    return parity
 
 
 if __name__ == "__main__":

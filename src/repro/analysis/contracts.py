@@ -17,7 +17,13 @@ runs and cannot drift from what XLA actually lowered:
   - expected ``known_trip_count``s: the fused rounds are lax.scans over
     draft steps / tree expansions — the trip counts pin that the scan
     structure survived lowering (a full unroll or a dynamic while both
-    break the one-executable-many-steps story).
+    break the one-executable-many-steps story);
+  - mesh placement lowered for real: on a sharded server the entry params
+    must keep split ``sharding={devices=[...]}`` annotations
+    (``assert_sharding``), and ``collective_counts`` /
+    ``assert_no_collectives`` pin which cross-device collectives the round
+    body is allowed — a single-device round compiles collective-free, a
+    sharded one carries TP all-reduces but no resharding all-to-alls.
 
 Built on the HLO text parser in ``analysis.hlo_costs`` (same grammar, same
 ``known_trip_count`` source) and the lowering idiom of
@@ -63,6 +69,18 @@ _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CUSTOM_TARGET = re.compile(r'custom_call_target="([^"]+)"')
 _HOST_TRANSFER_OPS = ("infeed(", "outfeed(", " send(", " recv(",
                       "send-done(", "recv-done(")
+# entry-parameter sharding annotations: `parameter(N), sharding={...}`;
+# the tile shape lives in `devices=[d0,d1,...]<=[n]`, optionally with a
+# trailing replicated tile dim (last_tile_dim_replicate)
+_PARAM_SHARDING = re.compile(
+    r"parameter\((\d+)\)[^\n]*?sharding=(\{[^\n]*?\})"
+)
+_TILE_DIMS = re.compile(r"devices=\[([\d,]+)\]")
+# cross-device collectives, with or without async -start/-done splitting
+_COLLECTIVE = re.compile(
+    r"= \S+ (all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
 
 
 def _balanced_block(text: str, start: int) -> str:
@@ -149,6 +167,54 @@ class HloContract:
         return tuple(found)
 
     @functools.cached_property
+    def entry_text(self) -> str:
+        """The ENTRY computation's text (XLA prints it last)."""
+        i = self.text.rfind("\nENTRY")
+        return self.text[i:] if i >= 0 else self.text
+
+    @functools.cached_property
+    def param_shardings(self) -> Dict[int, str]:
+        """Entry-parameter number -> raw ``sharding={...}`` annotation.
+
+        Parameters without an annotation (or an executable compiled off-mesh)
+        are absent; ``{replicated}`` entries are kept — distinguishing
+        "explicitly replicated" from "unannotated" matters for the gates/c
+        scalars of a sharded round."""
+        return {
+            int(n): s
+            for n, s in _PARAM_SHARDING.findall(self.entry_text)
+        }
+
+    @functools.cached_property
+    def sharded_params(self) -> Tuple[int, ...]:
+        """Flat entry-parameter numbers actually SPLIT across devices (some
+        tile dim > 1 after dropping a ``last_tile_dim_replicate`` dim) —
+        the compiled-artifact proof that ``NamedSharding`` placements
+        survived to the executable instead of degrading to replication."""
+        out = []
+        for n, s in self.param_shardings.items():
+            m = _TILE_DIMS.search(s)
+            if not m:
+                continue
+            dims = [int(d) for d in m.group(1).split(",")]
+            if "last_tile_dim_replicate" in s and len(dims) > 1:
+                dims = dims[:-1]
+            if any(d > 1 for d in dims):
+                out.append(n)
+        return tuple(sorted(out))
+
+    @functools.cached_property
+    def collective_counts(self) -> Dict[str, int]:
+        """Cross-device collective op -> instruction count over the whole
+        module (async ``-start`` forms count once; ``-done`` is not an op
+        name match). Empty off-mesh — a single-device lowering that emits
+        collectives would be a compile bug worth failing on."""
+        counts: Dict[str, int] = {}
+        for op in _COLLECTIVE.findall(self.text):
+            counts[op] = counts.get(op, 0) + 1
+        return counts
+
+    @functools.cached_property
     def executable_costs(self) -> dict:
         """Trip-count-aware flops/collective bytes (analysis.hlo_costs)."""
         from repro.analysis.hlo_costs import total_costs
@@ -210,6 +276,39 @@ class HloContract:
                 f"no while loop with known_trip_count={n} "
                 f"(found: {list(self.trip_counts)})"
             )
+        return self
+
+    def assert_sharding(self, *expect_flat: int, at_least: int = 1) -> "HloContract":
+        """Mesh placement survived lowering: at least ``at_least`` entry
+        parameters are genuinely split across devices, and (when given)
+        each flat position in ``expect_flat`` is among them. Like
+        ``assert_donated``, positions index the FLATTENED argument list."""
+        if len(self.sharded_params) < at_least:
+            self._fail(
+                f"expected >= {at_least} sharded entry params, found "
+                f"{len(self.sharded_params)} "
+                f"(annotated: {sorted(self.param_shardings)}) — mesh "
+                "placement did not survive lowering"
+            )
+        missing = [p for p in expect_flat if p not in self.sharded_params]
+        if missing:
+            self._fail(
+                f"flat params {missing} not sharded "
+                f"(sharded: {list(self.sharded_params)})"
+            )
+        return self
+
+    def assert_no_collectives(self, *kinds: str) -> "HloContract":
+        """No cross-device collectives of the given kinds (all kinds when
+        none given). A single-device round must compile collective-free;
+        a sharded round uses this with e.g. ``"all-to-all"`` to pin that
+        resharding round-trips never crept into the round body."""
+        bad = {
+            op: n for op, n in self.collective_counts.items()
+            if not kinds or op in kinds
+        }
+        if bad:
+            self._fail(f"unexpected collectives in the executable: {bad}")
         return self
 
 

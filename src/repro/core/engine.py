@@ -34,6 +34,7 @@ from repro.core.pld import PromptLookup
 from repro.core.tree import DraftTree, bucket_for, tree_seed_device
 from repro.core import verify as verify_lib
 from repro.models import model as M
+from repro.models.shard_utils import constrain, data_axis
 
 import dataclasses
 
@@ -699,7 +700,17 @@ def cascade_rescore_verify(
     the target's ``tree_verify_accept_commit`` over the rescored tree, so an
     L-level cascade round is 1 draft + (L-2) rescores + 1 rescore-and-verify
     dispatch — and the commit scatter can alias a donated cache in place.
+    On a mesh the per-slot tree arrays are pinned to their data-parallel
+    placement on entry and exit (``_pin_batch``; no-op off-mesh), so the
+    fused dispatch neither regathers the proposal nor reshards the cache it
+    commits into.
     Returns the rescore outputs followed by (cache, path, n_acc, bonus)."""
+    dax = data_axis()
+    (tokens, parents, depth, p_acc, mask, count, probe, apply, alpha,
+     live) = _pin_batch(
+        (tokens, parents, depth, p_acc, mask, count, probe, apply, alpha,
+         live), dax,
+    )
     (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
      probe_valid) = cascade_rescore(
         cfg, level_params, cache, tokens, parents, depth, p_acc, mask, count,
@@ -711,11 +722,35 @@ def cascade_rescore_verify(
         cfg, target_params, cache, tokens, parents, depth, mask, count, live,
         attn_backend=attn_backend,
     )
+    (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
+     probe_valid, path, n_acc, bonus) = _pin_batch(
+        (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
+         probe_valid, path, n_acc, bonus), dax,
+    )
     return (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
             probe_valid, new_cache, path, n_acc, bonus)
 
 
 # ===================================================== single-dispatch rounds
+def _pin_batch(tree, dax):
+    """Pin every array in ``tree`` (a dict or flat sequence of per-slot
+    arrays, leading dim = batch) to the data-parallel axes. On a mesh this
+    keeps the carried round state resident in its data-sharded placement —
+    the round's outputs then alias the donated inputs with NO resharding
+    collective between rounds; off-mesh ``constrain`` no-ops, so
+    single-device rounds lower to byte-identical executables."""
+    if dax is None:
+        return tree
+    if isinstance(tree, dict):
+        return {
+            k: constrain(v, dax, *([None] * (v.ndim - 1)))
+            for k, v in tree.items()
+        }
+    return type(tree)(
+        constrain(v, dax, *([None] * (v.ndim - 1))) for v in tree
+    )
+
+
 def _round_prologue(cfg, cache, state, draft_k, max_ngram, min_ngram):
     """Shared head of the fused rounds: append the pending token to the
     device context buffer and retrieve PLD proposals for every slot inside
@@ -785,8 +820,13 @@ def chain_round(
     Returns ``(cache, state, out)`` where ``out`` holds the round's
     accepted tokens: ``acc (B, k+1)`` (valid prefix ``n_acc``), plus
     ``pld_have``/``have`` for host-side stats.
+
+    On a mesh the carried state is pinned to its data-parallel placement
+    on entry AND exit (see ``_pin_batch``): one donated dispatch per round
+    stays one dispatch — no resharding round-trips between rounds.
     """
-    state = dict(state)
+    dax = data_axis()
+    state = _pin_batch(dict(state), dax)
     live = state["live"]
     pending = state["pending"]
     n = cache["pos"]
@@ -840,7 +880,7 @@ def chain_round(
         "acc": acc_tok, "n_acc": n_acc,
         "drafted": jnp.maximum(have - pld_have, 0).sum(),
     }
-    return new_cache, state, out
+    return new_cache, _pin_batch(state, dax), _pin_batch(out, dax)
 
 
 def tree_round(
@@ -870,8 +910,10 @@ def tree_round(
     PLD retrieval + tree seeding + the expansion scan + target verify + the
     vectorized accepted-path walk + cache/context commit + the Eq. 4 EMA
     update, all in a single jitted dispatch. Same carried ``state`` contract
+    (and the same entry/exit ``_pin_batch`` placement pins on a mesh)
     as ``chain_round``; ``out["acc"]`` holds the accepted path tokens."""
-    state = dict(state)
+    dax = data_axis()
+    state = _pin_batch(dict(state), dax)
     live = state["live"]
     pending = state["pending"]
     n = cache["pos"]
@@ -944,7 +986,7 @@ def tree_round(
         "acc": acc_tok, "n_acc": n_acc,
         "drafted": jnp.clip(count - pld_have - 1, 0, None).sum(),
     }
-    return new_cache, state, out
+    return new_cache, _pin_batch(state, dax), _pin_batch(out, dax)
 
 
 class SpecEngine:

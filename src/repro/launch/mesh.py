@@ -31,11 +31,40 @@ def make_mesh_compat(shape: tuple, axes: tuple):
 
 def set_global_mesh(mesh):
     """``jax.sharding.set_mesh`` where it exists (needed so trace-time
-    ``with_sharding_constraint`` sees the abstract mesh); no-op fallback."""
+    ``with_sharding_constraint`` sees the abstract mesh); on older JAX the
+    mesh is registered as ``models.shard_utils``' concrete fallback, so
+    constraints apply as ``NamedSharding(mesh, spec)`` instead of
+    no-op'ing — same placements on every supported release."""
+    from repro.models import shard_utils
+
+    shard_utils.set_compat_mesh(mesh)
     setter = getattr(jax.sharding, "set_mesh", None)
     if setter is not None:
         setter(mesh)
     return mesh
+
+
+def mesh_from_spec(spec: str):
+    """Build a mesh from a ``"model=K,data=D"`` CLI spec (axis order is
+    normalized to the repo's ``("pod", "data", "model")`` convention, so
+    ``model=2,data=4`` and ``data=4,model=2`` are the same mesh). Axis
+    sizes must multiply to a divisor of the visible device count —
+    ``jax.make_mesh`` enforces that; off-accelerator runs force devices
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    sizes = {}
+    for part in spec.split(","):
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if name not in ("pod", "data", "model") or not val.strip().isdigit():
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected 'model=K,data=D' with "
+                "axes from pod/data/model and integer sizes"
+            )
+        sizes[name] = int(val)
+    axes = tuple(a for a in ("pod", "data", "model") if a in sizes)
+    if not axes:
+        raise ValueError(f"bad mesh spec {spec!r}: no axes given")
+    return make_mesh_compat(tuple(sizes[a] for a in axes), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -2,6 +2,16 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --reduced \
       --scheduler dytc --tokens 64
+
+``--mesh model=K,data=D`` switches to the batched continuous-batching
+server (``serving.server.BatchedSpecServer`` + ``ServeLoop``) with the
+target tensor-parallel over ``model`` and the batch slots data-parallel
+over ``data`` — the single-dispatch round runs unchanged on the mesh (see
+docs/sharding.md). Off-accelerator, force host devices first:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --reduced \
+      --mesh model=2,data=4 --mode chain_fused --batch 4 --tokens 32
 """
 from __future__ import annotations
 
@@ -34,6 +44,41 @@ SCHEDULERS = {
 }
 
 
+def run_batched(cfg, params, args) -> None:
+    """``--mesh`` path: mesh-sharded batched serving rounds."""
+    from repro.launch.mesh import mesh_from_spec, set_global_mesh
+    from repro.serving.scheduler import Request, RequestScheduler, ServeLoop
+    from repro.serving.server import BatchedSpecServer
+
+    # this process owns serving end to end, so the global mesh is safe here
+    # (and activates the engine-internal batch pins); libraries embedding
+    # the server pass ``mesh=`` only — see the server docstring
+    mesh = set_global_mesh(mesh_from_spec(args.mesh))
+    print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} devices")
+    srv_kw: dict = {}
+    if args.mode != "cascade_fused":
+        srv_kw["draft_spec"] = layer_sparsity(cfg, 0.4)
+    srv = BatchedSpecServer(
+        cfg, params, max_batch=args.batch, max_len=1024,
+        mode=args.mode, mesh=mesh, **srv_kw,
+    )
+    sched = RequestScheduler(args.batch)
+    for p in make_task_prompts(SPEC_TASKS[args.task], args.batch, cfg.vocab_size):
+        sched.submit(Request(prompt=p, max_new_tokens=args.tokens))
+    loop = ServeLoop(srv, sched)
+    t0 = time.perf_counter()
+    while sched.busy:
+        loop.step_once()
+    dt = time.perf_counter() - t0
+    s = srv.stats
+    tok = sum(len(r.generated) for r in sched.finished)
+    print(f"mode={args.mode} mesh={args.mesh} requests={len(sched.finished)} "
+          f"tokens={tok} time={dt:.2f}s ({dt/max(tok,1)*1e3:.1f} ms/tok)")
+    print(f"rounds={s['steps']} round_dispatches={s['round_dispatches']} "
+          f"host_syncs={s['host_syncs']} "
+          f"tokens/round={s['tokens']/max(s['steps'],1):.2f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vicuna-7b")
@@ -41,12 +86,23 @@ def main():
     ap.add_argument("--scheduler", default="dytc", choices=sorted(SCHEDULERS))
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--task", default="summarization")
+    ap.add_argument("--mesh", default=None,
+                    help="'model=K,data=D' -> mesh-sharded batched server")
+    ap.add_argument("--mode", default="chain_fused",
+                    choices=["chain_fused", "legacy", "tree_fused",
+                             "cascade_fused"],
+                    help="batched server mode (with --mesh)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch slots (with --mesh)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = dataclasses.replace(cfg.reduced(), num_layers=8)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if args.mesh:
+        run_batched(cfg, params, args)
+        return
     prompt = make_task_prompts(SPEC_TASKS[args.task], 1, cfg.vocab_size)[0]
 
     eng = SpecEngine(cfg, params, max_len=1024)

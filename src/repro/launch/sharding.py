@@ -152,7 +152,7 @@ def cache_seq_axes(cfg: ModelConfig, mesh, *, shard_seq: bool = False):
     pol = attention_policy(cfg, n)
     axes = ()
     if shard_seq:
-        axes += _dp(mesh) if isinstance(_dp(mesh), tuple) else (_dp(mesh),)
+        axes += _dp_axes(mesh)
     if pol != "kv":
         axes += ("model",)
     return axes or None
@@ -169,14 +169,19 @@ def seq_shard_count(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> int:
 
 
 def cache_specs(
-    cfg: ModelConfig, mesh, *, shard_seq: bool = False, ring_window: bool = False
+    cfg: ModelConfig, mesh, *, shard_seq: bool = False,
+    ring_window: bool = False, global_batch: int | None = None,
 ) -> dict:
     """Cache pytree specs. shard_seq=True -> context parallelism for batch=1
-    long-context decode."""
+    long-context decode. global_batch (when given) gates the batch axis on
+    even divisibility — serving caches with B below the data-way count stay
+    replicated on batch instead of carrying a non-dividing spec."""
     n = _axis_size(mesh, "model")
     pol = attention_policy(cfg, n)
     kh = "model" if pol == "kv" else None
-    batch_ax = None if shard_seq else _dp(mesh)
+    batch_ax = None if shard_seq else (
+        _dp(mesh) if global_batch is None else batch_axis(mesh, global_batch)
+    )
     seq_ax = cache_seq_axes(cfg, mesh, shard_seq=shard_seq)
     segs = []
     from repro.config.base import AttentionKind
@@ -206,19 +211,55 @@ def cache_specs(
     return {"pos": P(batch_ax), "segments": segs}
 
 
+def _dp_axes(mesh) -> tuple:
+    """The batch-parallel mesh axes, always as a tuple (callers used to
+    normalize ``_dp``'s tuple-vs-str return inline at every site)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
 def _dp(mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    """Batch-parallel axes as a PartitionSpec entry: the compound tuple on
+    pod meshes, the bare axis name otherwise. Prefer ``_dp_axes`` when
+    iterating; this form only exists for spec-entry ergonomics."""
+    axes = _dp_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def dp_size(mesh) -> int:
+    """Total batch-parallel way count of ``mesh``."""
+    return int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]))
+
+
+def batch_axis(mesh, global_batch: int):
+    """The data-parallel batch axis as a spec entry, or None when
+    ``global_batch`` cannot shard evenly over it (GSPMD would silently
+    no-op a non-dividing constraint anyway; placement must agree)."""
+    d = dp_size(mesh)
+    ok = global_batch % d == 0 and global_batch >= d
+    return _dp(mesh) if ok else None
 
 
 def batch_specs(cfg: ModelConfig, mesh, *, global_batch: int) -> dict:
-    dp = _dp(mesh)
-    dp_size = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))]))
-    bax = dp if global_batch % dp_size == 0 and global_batch >= dp_size else None
+    bax = batch_axis(mesh, global_batch)
     out = {"tokens": P(bax, None, None) if cfg.num_codebooks else P(bax, None)}
     if cfg.num_image_tokens:
         out["image_embeds"] = P(bax, None, None)
         out["image_mask"] = P(bax, None)
     return out
+
+
+def round_state_specs(mesh, *, global_batch: int) -> dict:
+    """Specs for the batched server's carried round state (congruent with
+    ``BatchedSpecServer.dstate``): every array is per-slot, so everything
+    shards on its leading batch dim along the data axes — the serving
+    analogue of ``batch_specs`` (tensor parallelism lives in the params;
+    the per-slot EMAs/budgets/ctx are pure data parallelism)."""
+    bax = batch_axis(mesh, global_batch)
+    return {
+        "pending": P(bax), "live": P(bax), "ctx": P(bax, None),
+        "alpha": P(bax), "hist": P(bax, None),
+        "hist_n": P(bax), "hist_ptr": P(bax),
+    }
 
 
 def staged_specs(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> list:

@@ -11,13 +11,43 @@ Axis = Union[None, str, Tuple[str, ...]]
 # the batch/token-parallel axes in priority order
 DATA_AXES = ("pod", "data")
 
+# Concrete-mesh fallback for JAX releases without jax.sharding.set_mesh /
+# get_abstract_mesh (<= 0.4.x): launch.mesh.set_global_mesh registers the
+# mesh here, and constraints are applied as NamedSharding(mesh, spec) —
+# which works inside jit on every supported release — instead of the
+# bare-PartitionSpec form that needs the abstract-mesh context.
+_COMPAT_MESH = None
 
-def _mesh_axes() -> dict:
+
+def set_compat_mesh(mesh) -> None:
+    """Register (or clear, with None) the concrete fallback mesh."""
+    global _COMPAT_MESH
+    _COMPAT_MESH = mesh
+
+
+def _abstract_axes() -> dict:
     try:
         mesh = jax.sharding.get_abstract_mesh()
         return dict(zip(mesh.axis_names, mesh.axis_sizes))
     except Exception:
         return {}
+
+
+def _mesh_axes() -> dict:
+    axes = _abstract_axes()
+    if axes:
+        return axes
+    if _COMPAT_MESH is not None:
+        return {a: _COMPAT_MESH.shape[a] for a in _COMPAT_MESH.axis_names}
+    return {}
+
+
+def _apply_constraint(x: jax.Array, spec: list) -> jax.Array:
+    if not _abstract_axes() and _COMPAT_MESH is not None:
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(_COMPAT_MESH, P(*spec))
+        )
+    return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
 def constrain(x: jax.Array, *axes: Axis) -> jax.Array:
@@ -43,7 +73,7 @@ def constrain(x: jax.Array, *axes: Axis) -> jax.Array:
     spec = [resolve(a, d) for a, d in zip(axes, x.shape)]
     if not any(s for s in spec):
         return x
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return _apply_constraint(x, spec)
 
 
 def data_axis() -> Axis:
@@ -80,7 +110,7 @@ def constrain_full(x: jax.Array, *axes: Axis) -> jax.Array:
         return kept if len(kept) > 1 else kept[0]
 
     spec = [resolve(a, d) for a, d in zip(axes, x.shape)]
-    return jax.lax.with_sharding_constraint(x, P(*spec))
+    return _apply_constraint(x, spec)
 
 
 def attention_head_policy(num_heads: int, num_kv_heads: int) -> str:

@@ -64,6 +64,10 @@ class DraftBank:
       - ``"kernel"`` — force the Pallas W8A8 path (interpret-mode off TPU;
         only sensible in parity tests);
       - ``"sim"``    — force the fake-quant parameter copy.
+
+    ``param_sharding`` (a NamedSharding tree congruent with ``params``)
+    places any materialized int8 copy like the target weights, so sharded
+    servers keep every cascade level tensor-parallel on the same mesh.
     """
 
     def __init__(
@@ -73,6 +77,7 @@ class DraftBank:
         hierarchy: Sequence[DraftSpec],
         *,
         int8_exec: str = "auto",
+        param_sharding=None,
     ):
         if int8_exec not in ("auto", "kernel", "sim"):
             raise ValueError(f"unknown int8_exec {int8_exec!r}")
@@ -102,7 +107,13 @@ class DraftBank:
                     quantize = "int8"        # dynamic in-kernel quantization
                 else:
                     if id(params) not in quant_cache:
-                        quant_cache[id(params)] = fake_quant_int8(params)
+                        q = fake_quant_int8(params)
+                        if param_sharding is not None:
+                            # int8 sim copies inherit the target's mesh
+                            # placement — the fake-quant tree is congruent
+                            # with params, so the same sharding tree applies
+                            q = jax.device_put(q, param_sharding)
+                        quant_cache[id(params)] = q
                     level_params, owns = quant_cache[id(params)], True
             override = None
             if spec.attn_override is not None:

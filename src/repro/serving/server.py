@@ -100,13 +100,43 @@ chain analogue of DyTC's stop rule. PLD proposals are effectively free
 (host-side retrieval, fixed-width verify), so they are never truncated by
 the adaptive limit. Slot estimates reset on request admission (continuous
 batching reuses slots across requests).
+
+Dispatch contracts (PR 6)
+-------------------------
+``round_executables()`` enumerates every jitted executable a steady-state
+round dispatches as ``{name: (jitted_fn, example_args)}``, and
+``expected_dispatches_per_round()`` is the static count the runtime
+``round_dispatches``/``host_syncs`` counters are held to.
+``analysis.contracts.server_round_contracts`` lowers + compiles each
+executable and asserts the discipline on the COMPILED artifact: donation
+lowered to real ``input_output_alias`` entries, no host callbacks or
+transfers inside a round body, the expected scan trip counts, and — on a
+mesh — param/cache sharding annotations (``assert_sharding``) plus the
+absence of resharding collectives. See docs/analysis.md.
+
+Mesh-sharded serving (``mesh=``)
+--------------------------------
+Pass a ``("data", "model")`` mesh (``launch.mesh.make_mesh_compat`` /
+``mesh_from_spec``) and the server places the target AND every draft-bank
+level tensor-parallel over ``model`` (``launch.sharding.param_specs``;
+int8 bank copies inherit the target's placements) and shards the per-slot
+round state — the KV cache, the carried ctx buffer, Eq. 4 EMAs, budgets —
+over the data axes (``launch.sharding.cache_specs`` /
+``round_state_specs``; batch stays replicated when ``max_batch`` doesn't
+divide the data-way count). The fused rounds stay ONE donated dispatch on
+the mesh: the engine pins carried state to its placement inside the round
+(``core.engine._pin_batch``) and the server pins the jit boundary with
+concrete ``NamedSharding`` out-constraints, so aliasing survives lowering
+and no resharding collective runs between rounds. Greedy output is
+token-identical to the single-device server in every mode
+(tests/test_server_sharded.py). See docs/sharding.md.
 """
 from __future__ import annotations
 
 import functools
 import os
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -165,10 +195,44 @@ class BatchedSpecServer:
         round_mode: str = "auto",      # auto | single (one dispatch/round) | split
         sync_every: Optional[int] = None,   # single: drain every N rounds
         donate: Optional[bool] = None,      # None = auto (see below)
+        mesh=None,                     # jax Mesh: TP params + DP slots (docstring)
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
         self.draft_spec = draft_spec
+        # ---- mesh placement (tensor-parallel params, data-parallel slots).
+        # Shardings are held per-server and applied with explicit
+        # device_put / NamedSharding constraints — never via the global
+        # mesh — so a sharded and a single-device server can coexist in
+        # one process (the parity tests do exactly that).
+        self.mesh = mesh
+        self._param_sharding: Any = None       # NamedSharding trees when
+        self._cache_sharding: Any = None       # mesh is set, else None
+        self._c1_sharding: Any = None
+        self._state_sharding: Any = None
+        self._replicated: Any = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.launch import sharding as SH
+
+            def ns_tree(spec_tree):
+                return jax.tree.map(
+                    lambda s: NamedSharding(mesh, s), spec_tree,
+                    is_leaf=lambda x: isinstance(x, PartitionSpec),
+                )
+
+            self._param_sharding = ns_tree(SH.param_specs(cfg, mesh))
+            self._cache_sharding = ns_tree(
+                SH.cache_specs(cfg, mesh, global_batch=max_batch)
+            )
+            self._c1_sharding = ns_tree(
+                SH.cache_specs(cfg, mesh, global_batch=1)
+            )
+            self._state_sharding = ns_tree(
+                SH.round_state_specs(mesh, global_batch=max_batch)
+            )
+            self._replicated = NamedSharding(mesh, PartitionSpec())
+            self.params = jax.device_put(self.params, self._param_sharding)
         if mode is None:
             mode = "chain_fused" if fused else "legacy"
         if mode not in PROPOSAL_MODES:
@@ -265,10 +329,11 @@ class BatchedSpecServer:
             extra = 0
             if mode == "cascade_fused":
                 self.bank = DraftBank(
-                    cfg, params,
+                    cfg, self.params,
                     hierarchy if hierarchy is not None
                     else build_hierarchy(cfg, "mixing"),
                     int8_exec=int8_exec,
+                    param_sharding=self._param_sharding,
                 )
                 # one hedge sibling + one extension node per rescore level
                 extra = 2 * len(self.bank.rescorers)
@@ -279,6 +344,8 @@ class BatchedSpecServer:
         self.acceptance = AcceptanceTracker()
         self.costs = CostTracker()
         self.cache = M.init_cache(cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype))
+        if mesh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_sharding)
         self.pending = np.zeros(max_batch, np.int64)
         self.contexts: List[List[int]] = [[] for _ in range(max_batch)]
         self.live = np.zeros(max_batch, bool)
@@ -295,9 +362,13 @@ class BatchedSpecServer:
             "ctx": jnp.zeros((max_batch, max_len), jnp.int32),
             "alpha": al0, "hist": h0, "hist_n": hn0, "hist_ptr": hp0,
         }
+        if mesh is not None:
+            self.dstate = jax.device_put(self.dstate, self._state_sharding)
         self._prior_alpha = prior0
         c0 = float(draft_spec.prior_c) if draft_spec else 0.5
         self._c_dev = jnp.asarray(max(c0, 1e-3), jnp.float32)
+        if mesh is not None:
+            self._c_dev = jax.device_put(self._c_dev, self._replicated)
         self._inflight: List[dict] = []     # undrained round outputs (single)
         self._out_buf: Dict[int, List[int]] = {}
 
@@ -362,6 +433,26 @@ class BatchedSpecServer:
                     draft_kv=self.draft_kv, attn_backend=attn_backend,
                     **pld_kw,
                 )
+            if mesh is not None:
+                # belt-and-braces on a mesh: pin the donated outputs to the
+                # exact input placements at the jit boundary (concrete
+                # NamedShardings work on every supported JAX, unlike the
+                # abstract-mesh form), so the cache/state aliasing can never
+                # be dropped by an output-sharding drift — the single
+                # dispatch stays resharding-free between rounds
+                inner_round = fn
+                csh, ssh = self._cache_sharding, self._state_sharding
+
+                def fn(p, cache, state, c, gates):
+                    cache, state, out = inner_round(p, cache, state, c, gates)
+                    cache = jax.tree.map(
+                        jax.lax.with_sharding_constraint, cache, csh
+                    )
+                    state = jax.tree.map(
+                        jax.lax.with_sharding_constraint, state, ssh
+                    )
+                    return cache, state, out
+
             # donate the cache AND the carried state: the commit scatter and
             # the state updates alias in place instead of copying the
             # largest live buffers every round
@@ -376,12 +467,15 @@ class BatchedSpecServer:
             if draft_spec is None
             else jnp.asarray(draft_spec.gates_array(cfg.num_layers))
         )
+        if mesh is not None and self._gates is not None:
+            self._gates = jax.device_put(self._gates, self._replicated)
         self._level_gates: Dict[int, Optional[jax.Array]] = {}
         if self.bank is not None:
             for lvl in self.bank.levels:
-                self._level_gates[lvl.index] = (
-                    None if lvl.gates is None else jnp.asarray(lvl.gates)
-                )
+                g = None if lvl.gates is None else jnp.asarray(lvl.gates)
+                if mesh is not None and g is not None:
+                    g = jax.device_put(g, self._replicated)
+                self._level_gates[lvl.index] = g
         self.stats = {
             "steps": 0, "tokens": 0, "target_calls": 0,
             "draft_dispatches": 0, "draft_time": 0.0, "verify_time": 0.0,
@@ -412,6 +506,10 @@ class BatchedSpecServer:
         self._out_buf.pop(slot, None)
         prompt = np.asarray(prompt, np.int32)
         c1 = M.init_cache(self.cfg, 1, self.max_len, dtype=jnp.dtype(self.cfg.dtype))
+        if self.mesh is not None:
+            # B=1 prefill cache: batch can't shard, but layout must match the
+            # sharded weights it is written from (TP head placement)
+            c1 = jax.device_put(c1, self._c1_sharding)
         last, c1 = self._prefill1(self.params, {"tokens": jnp.asarray(prompt[None])}, c1)
         slot_d = jnp.asarray(slot, jnp.int32)
         self.cache = self._write_slot_fn(self.cache, c1, slot_d)
