@@ -49,6 +49,15 @@ Three questions, one request stream:
      only, in a subprocess because the forced device count must precede
      jax initialization).
 
+  7. telemetry economics (docs/observability.md): the device-carried
+     round-telemetry buffer rides the single-dispatch round, so enabling
+     it must add ZERO round dispatches and ZERO host syncs (exact
+     equality; the runtime twin of the static
+     ``assert_telemetry_transparent`` contract) and keep rounds/s within
+     5% of the disabled server (``serve/telemetry_overhead``; the smoke
+     canary fails either way), with the telemetry-derived acceptance
+     report riding along (``serve/telemetry_report``).
+
 All variants are lossless (greedy output == AR), so tokens/step and round
 latency are the whole story.
 """
@@ -69,7 +78,8 @@ MAX_BATCH = 4
 DRAFT_K = 4
 
 
-def _serve_stream(cfg, params, prompts, n_tokens, *, mode, adaptive, **srv_kw):
+def _serve_stream(cfg, params, prompts, n_tokens, *, mode, adaptive,
+                  with_summary=False, passes=1, **srv_kw):
     kw = (
         # default mixing hierarchy: a layer-sparsity level + an int8 level
         {} if mode == "cascade_fused"
@@ -89,19 +99,27 @@ def _serve_stream(cfg, params, prompts, n_tokens, *, mode, adaptive, **srv_kw):
         t0 = time.perf_counter()
         steps0, tokens0 = srv.stats["steps"], srv.stats["tokens"]
         wait0, syncs0 = srv.stats["device_wait"], srv.stats["host_syncs"]
+        rdisp0 = srv.stats["round_dispatches"]
         ServeLoop(srv, sched).run()
         srv.flush()                 # drain pipelined tails into this pass
         return (time.perf_counter() - t0,
                 srv.stats["steps"] - steps0, srv.stats["tokens"] - tokens0,
                 srv.stats["device_wait"] - wait0,
-                srv.stats["host_syncs"] - syncs0)
+                srv.stats["host_syncs"] - syncs0,
+                srv.stats["round_dispatches"] - rdisp0)
 
     one_pass()                      # warmup: compiles every scan-length variant
-    wall, steps, tokens, dev_wait, syncs = one_pass()
+    # best-of-``passes`` on wall time: identical work each pass (fixed
+    # stream, greedy), so the fastest pass is the least-noise estimate —
+    # the timing-sensitive A/Bs (telemetry overhead) use passes=2
+    results = [one_pass() for _ in range(max(passes, 1))]
+    wall, steps, tokens, dev_wait, syncs, rdisp = min(results,
+                                                      key=lambda r: r[0])
     steps = max(steps, 1)
-    return {
+    r = {
         "tokens_per_step": tokens / steps,
         "us_per_round": wall / steps * 1e6,
+        "rounds_per_s": steps / max(wall, 1e-9),
         "draft_dispatches_per_round": srv.stats["draft_dispatches"] / max(srv.stats["steps"], 1),
         # host-overhead breakdown: device_us = wall the host spent BLOCKED
         # on device results, host_us = everything else (python bookkeeping,
@@ -110,8 +128,17 @@ def _serve_stream(cfg, params, prompts, n_tokens, *, mode, adaptive, **srv_kw):
         "device_us_per_round": dev_wait / steps * 1e6,
         "host_us_per_round": (wall - dev_wait) / steps * 1e6,
         "host_syncs_per_round": syncs / steps,
+        # raw per-pass dispatch/sync counts: the telemetry-overhead arm
+        # pins these to EXACT equality between telemetry on and off
+        "round_dispatches": rdisp,
+        "host_syncs": syncs,
         "steps": steps,
     }
+    if with_summary:
+        # telemetry-derived report (docs/observability.md) — cumulative
+        # over warmup + timed pass, drained at this sync point only
+        r["telemetry"] = srv.metrics_summary()
+    return r
 
 
 def main(n_tokens: int = 32, smoke: bool = False) -> dict:
@@ -258,13 +285,55 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
     if single_speed < 1.15:
         print(f"WARNING: single-dispatch round below the 1.15x target "
               f"vs split ({single_speed:.3f})")
+    # telemetry-overhead A/B (docs/observability.md): the device-carried
+    # telemetry buffer rides the SAME single-dispatch round, so enabling
+    # it must add ZERO dispatches and ZERO host syncs (exact equality —
+    # deterministic, the runtime twin of assert_telemetry_transparent)
+    # and must keep rounds/s within 5% of the disabled server (timing).
+    telem_kw = dict(mode="chain_fused", adaptive=True, min_obs=1, t_min=10.0,
+                    max_batch=8, max_len=192,
+                    round_mode="single", sync_every=4)
+    t_on = _serve_stream(cfg, params, round_prompts, max(n_tokens, 16),
+                         telemetry=True, with_summary=True, passes=2,
+                         **telem_kw)
+    t_off = _serve_stream(cfg, params, round_prompts, max(n_tokens, 16),
+                          telemetry=False, passes=2, **telem_kw)
+    out["telemetry_on"], out["telemetry_off"] = t_on, t_off
+    telem_speed = t_on["rounds_per_s"] / max(t_off["rounds_per_s"], 1e-9)
+    telem_transparent = (
+        t_on["round_dispatches"] == t_off["round_dispatches"]
+        and t_on["host_syncs"] == t_off["host_syncs"]
+    )
+    print(csv_line(
+        "serve/telemetry_overhead", t_on["us_per_round"],
+        f"rounds_ratio={telem_speed:.3f};"
+        f"transparent={int(telem_transparent)};"
+        f"on_dispatches={t_on['round_dispatches']};"
+        f"off_dispatches={t_off['round_dispatches']};"
+        f"on_syncs={t_on['host_syncs']};off_syncs={t_off['host_syncs']}",
+    ))
+    out["telemetry_rounds_ratio"] = telem_speed
+    out["telemetry_transparent"] = telem_transparent
+    summ = t_on["telemetry"]
+    print(csv_line(
+        "serve/telemetry_report", t_on["us_per_round"],
+        f"tokens_per_step={summ['tokens_per_step']:.3f};"
+        f"accepted={sum(summ['accepted_per_slot'])};"
+        f"drafted={sum(summ['drafted_per_slot'])};"
+        f"pld_tokens={sum(summ['pld_tokens_per_slot'])};"
+        f"device_wait_s={summ['device_wait_s']:.3f}",
+    ))
+    if telem_speed < 0.95:
+        print(f"WARNING: telemetry-on rounds/s below 0.95x of disabled "
+              f"({telem_speed:.3f})")
     shard_parity = 1.0
     if smoke:
         shard_parity = _sharded_arm(out)
     if smoke and (ratio < 0.9 or c_ratio < 0.9
                   or not (0.97 <= kv_parity <= 1.03)
                   or not (0.999 <= shard_parity <= 1.001)
-                  or not (0.999 <= donate_parity <= 1.001)):
+                  or not (0.999 <= donate_parity <= 1.001)
+                  or telem_speed < 0.95 or not telem_transparent):
         # the canaries must be able to FAIL: tokens/step is deterministic
         # for a fixed stream/model (no timing noise), so a clear
         # accept-ratio regression exits nonzero and marks the non-blocking
@@ -277,7 +346,9 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
             f"(tree/chain {ratio:.3f}, cascade/tree {c_ratio:.3f}, "
             f"carry/recompute tps {kv_parity:.3f}, "
             f"sharded/single tps {shard_parity:.4f}, "
-            f"donated/nondonated tps {donate_parity:.4f})"
+            f"donated/nondonated tps {donate_parity:.4f}, "
+            f"telemetry rounds/s {telem_speed:.3f} "
+            f"transparent={telem_transparent})"
         )
         err.results = out
         raise err

@@ -54,6 +54,7 @@ __all__ = [
     "ContractViolation",
     "HloContract",
     "server_round_contracts",
+    "assert_telemetry_transparent",
 ]
 
 
@@ -324,3 +325,43 @@ def server_round_contracts(server) -> Dict[str, HloContract]:
         name: HloContract.from_jitted(fn, *args, name=name)
         for name, (fn, args) in server.round_executables().items()
     }
+
+
+def assert_telemetry_transparent(
+    off: Dict[str, HloContract], on: Dict[str, HloContract]
+) -> None:
+    """Prove — on the compiled artifacts — that the device telemetry buffer
+    changed NOTHING about the dispatch discipline (ISSUE 8's tentpole
+    gate): ``off``/``on`` are ``server_round_contracts`` results from two
+    servers identical except ``telemetry=``.
+
+      - same executable set: telemetry adds no dispatch of its own;
+      - no host callbacks or transfers on the telemetry-on side (the
+        accumulation is pure jnp composed at the jit boundary, never a
+        callback);
+      - scan trip counts identical per executable (the round structure
+        survived the composition);
+      - donation aliasing preserved or extended: every telemetry-on
+        executable keeps AT LEAST the telemetry-off alias count (the
+        buffer may add its own aliased entries, it must never cost the
+        cache/state theirs).
+    """
+    if set(off) != set(on):
+        raise ContractViolation(
+            f"telemetry changed the executable set: off={sorted(off)} "
+            f"on={sorted(on)}"
+        )
+    for name, con_on in on.items():
+        con_off = off[name]
+        con_on.assert_no_host_callbacks()
+        if con_on.trip_counts != con_off.trip_counts:
+            raise ContractViolation(
+                f"[{name}] telemetry changed scan trip counts: "
+                f"{list(con_off.trip_counts)} -> {list(con_on.trip_counts)}"
+            )
+        if con_on.alias_count < con_off.alias_count:
+            raise ContractViolation(
+                f"[{name}] telemetry LOST donation aliasing: "
+                f"{con_off.alias_count} -> {con_on.alias_count} aliased "
+                "outputs"
+            )

@@ -834,6 +834,7 @@ def chain_round(
         cfg, cache, state, draft_k, max_ngram, min_ngram
     )
     pld_have = have
+    limit = jnp.zeros_like(have)
     if use_draft:
         if adaptive:
             budget = best_chain_length_batched(
@@ -876,9 +877,13 @@ def chain_round(
         state["alpha"], state["hist"], state["hist_n"], state["hist_ptr"],
         outcome, obs,
     )
+    # per-slot round facts: the server's pipelined drain sums "drafted"
+    # when it resolves the future, and the device telemetry accumulator
+    # (serving/telemetry.py) folds the rest without any extra dispatch
     out = {
         "acc": acc_tok, "n_acc": n_acc,
-        "drafted": jnp.maximum(have - pld_have, 0).sum(),
+        "drafted": jnp.maximum(have - pld_have, 0),
+        "pld_have": pld_have, "budget": limit,
     }
     return new_cache, _pin_batch(state, dax), _pin_batch(out, dax)
 
@@ -926,6 +931,7 @@ def tree_round(
         pending, chains, have, bucket, pld_alpha
     )
     first_neural = jnp.full((B,), -1, jnp.int32)
+    limits = jnp.zeros((B,), jnp.int32)
     if use_draft and expansions > 0:
         if adaptive:
             budget = best_tree_expansions_batched(
@@ -982,9 +988,13 @@ def tree_round(
         state["alpha"], state["hist"], state["hist_n"], state["hist_ptr"],
         outcome.astype(jnp.float32), obs,
     )
+    # per-slot round facts (see chain_round): drained sums + telemetry
+    # accumulation happen downstream, inside the same executable or on
+    # already-resolved futures — never as an extra dispatch
     out = {
         "acc": acc_tok, "n_acc": n_acc,
-        "drafted": jnp.clip(count - pld_have - 1, 0, None).sum(),
+        "drafted": jnp.clip(count - pld_have - 1, 0, None),
+        "pld_have": pld_have, "budget": limits,
     }
     return new_cache, _pin_batch(state, dax), _pin_batch(out, dax)
 

@@ -12,11 +12,21 @@ docs/sharding.md). Off-accelerator, force host devices first:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch vicuna-7b --reduced \
       --mesh model=2,data=4 --mode chain_fused --batch 4 --tokens 32
+
+Observability (docs/observability.md): ``--metrics-port`` serves live
+Prometheus text at ``/metrics`` while the run is in flight,
+``--trace-out`` records Chrome-trace spans of the host-loop phases
+(open in Perfetto), ``--profile-dir`` wraps the run in
+``jax.profiler.trace``, and ``--metrics-jsonl`` appends the end-of-run
+registry snapshot as one JSONL record. Regardless of flags, the LAST
+stdout line is a single machine-readable JSON summary (``kind:
+"serve_summary"``) sourced from the metrics registry.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -31,6 +41,8 @@ from repro.core.dytc import DyTCScheduler
 from repro.core.engine import SpecEngine
 from repro.data import SPEC_TASKS, make_task_prompts
 from repro.models import model as M
+from repro.serving.exporters import JsonlSink, MetricsHTTPServer
+from repro.serving.telemetry import TraceRecorder, profiler_trace
 
 SCHEDULERS = {
     "ar": lambda e, cfg: ARScheduler(e),
@@ -42,6 +54,14 @@ SCHEDULERS = {
     "tree": lambda e, cfg: TreeScheduler(e, layer_sparsity(cfg, 0.4)),
     "dytc": lambda e, cfg: DyTCScheduler(e, build_hierarchy(cfg)),
 }
+
+
+def _emit_summary(summary: dict, args) -> None:
+    """The one machine-readable final line (+ optional JSONL record)."""
+    if args.metrics_jsonl:
+        with JsonlSink(args.metrics_jsonl) as sink:
+            sink.write(summary)
+    print(json.dumps(summary, sort_keys=True))
 
 
 def run_batched(cfg, params, args) -> None:
@@ -62,21 +82,38 @@ def run_batched(cfg, params, args) -> None:
         cfg, params, max_batch=args.batch, max_len=1024,
         mode=args.mode, mesh=mesh, **srv_kw,
     )
+    endpoint = (MetricsHTTPServer(srv.metrics, port=args.metrics_port)
+                if args.metrics_port is not None else None)
+    if endpoint is not None:
+        print(f"metrics: {endpoint.url}")
+    trace = TraceRecorder() if args.trace_out else None
     sched = RequestScheduler(args.batch)
     for p in make_task_prompts(SPEC_TASKS[args.task], args.batch, cfg.vocab_size):
         sched.submit(Request(prompt=p, max_new_tokens=args.tokens))
-    loop = ServeLoop(srv, sched)
+    loop = ServeLoop(srv, sched, trace=trace)
     t0 = time.perf_counter()
-    while sched.busy:
-        loop.step_once()
+    with profiler_trace(args.profile_dir):
+        while sched.busy:
+            loop.step_once()
+        srv.flush()
     dt = time.perf_counter() - t0
-    s = srv.stats
     tok = sum(len(r.generated) for r in sched.finished)
     print(f"mode={args.mode} mesh={args.mesh} requests={len(sched.finished)} "
           f"tokens={tok} time={dt:.2f}s ({dt/max(tok,1)*1e3:.1f} ms/tok)")
-    print(f"rounds={s['steps']} round_dispatches={s['round_dispatches']} "
-          f"host_syncs={s['host_syncs']} "
-          f"tokens/round={s['tokens']/max(s['steps'],1):.2f}")
+    if trace is not None:
+        trace.save(args.trace_out)
+        print(f"trace: {args.trace_out} (open in https://ui.perfetto.dev)")
+    if endpoint is not None:
+        endpoint.close()
+    summary = {
+        "kind": "serve_summary",
+        "mesh": args.mesh,
+        "requests": len(sched.finished),
+        "delivered_tokens": tok,
+        "wall_s": dt,
+        **srv.metrics_summary(),
+    }
+    _emit_summary(summary, args)
 
 
 def main():
@@ -94,6 +131,16 @@ def main():
                     help="batched server mode (with --mesh)")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch slots (with --mesh)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics on this port (0 = "
+                         "ephemeral; batched path)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome trace-event JSON of the host-loop "
+                         "phases here (batched path)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the run in jax.profiler.trace(log_dir)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append the final summary record to this JSONL file")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -109,14 +156,23 @@ def main():
     eng.start(prompt)
     sched = SCHEDULERS[args.scheduler](eng, cfg)
     t0 = time.perf_counter()
-    out = sched.generate(args.tokens)
+    with profiler_trace(args.profile_dir):
+        out = sched.generate(args.tokens)
     dt = time.perf_counter() - t0
     s = eng.stats
     print(f"scheduler={args.scheduler} tokens={len(out)} time={dt:.2f}s "
           f"({dt/len(out)*1e3:.1f} ms/tok)")
-    print(f"rounds={s['rounds']} target_calls={s['target_calls']} "
-          f"mean_accepted={s['accepted_tokens']/max(s['rounds'],1):.2f}")
     print("output:", out[:32], "..." if len(out) > 32 else "")
+    summary = {
+        "kind": "serve_summary",
+        "scheduler": args.scheduler,
+        "delivered_tokens": len(out),
+        "wall_s": dt,
+        "rounds": s["rounds"],
+        "target_calls": s["target_calls"],
+        "mean_accepted": s["accepted_tokens"] / max(s["rounds"], 1),
+    }
+    _emit_summary(summary, args)
 
 
 if __name__ == "__main__":

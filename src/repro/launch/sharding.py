@@ -262,6 +262,21 @@ def round_state_specs(mesh, *, global_batch: int) -> dict:
     }
 
 
+def telemetry_specs(schema: dict, mesh, *, global_batch: int) -> dict:
+    """Specs for the device telemetry buffer (serving.telemetry
+    .telemetry_schema): per-slot tallies shard on their leading batch dim
+    like the round state; the per-(level, slot) cascade rows carry batch
+    on their SECOND dim (the level dim is tiny and never sharded)."""
+    bax = batch_axis(mesh, global_batch)
+    out = {}
+    for k, (shape, _) in schema.items():
+        if k.startswith("casc_"):
+            out[k] = P(None, bax)
+        else:
+            out[k] = P(*((bax,) + (None,) * (len(shape) - 1)))
+    return out
+
+
 def staged_specs(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> list:
     """Specs for decode_step staged outputs (same layout as cache but with
     the T dim unsharded; mamba staged states carry an extra per-step dim)."""

@@ -24,6 +24,7 @@ import pytest
 from repro.analysis.contracts import (
     ContractViolation,
     HloContract,
+    assert_telemetry_transparent,
     server_round_contracts,
 )
 from repro.config import get_config
@@ -111,31 +112,59 @@ def test_cascade_round_within_levels_plus_one():
     cons["cascade_draft"].assert_trip_count(EXPANSIONS)
 
 
+# ------------------------------------------------- telemetry transparency
+@pytest.mark.parametrize("mode,kw", [
+    ("chain_fused", {"round_mode": "single"}),
+    ("chain_fused", {"round_mode": "split"}),
+    ("tree_fused", {"round_mode": "single"}),
+    ("cascade_fused", {}),
+])
+def test_telemetry_is_dispatch_transparent(mode, kw):
+    """Turning telemetry ON must not change the compiled round story: same
+    executables, same scan trip counts, no host callbacks, and donation
+    aliasing no weaker than the telemetry-off lowering (the buffer rides
+    existing dispatches — it never adds one)."""
+    off = server_round_contracts(_server(mode, telemetry=False, **kw))
+    srv_on = _server(mode, **kw)
+    on = server_round_contracts(srv_on)
+    assert_telemetry_transparent(off, on)
+    assert srv_on.expected_dispatches_per_round() == \
+        _server(mode, telemetry=False, **kw).expected_dispatches_per_round()
+
+
+def test_legacy_telemetry_transparent():
+    off = server_round_contracts(_server("legacy", telemetry=False))
+    on = server_round_contracts(_server("legacy"))
+    assert_telemetry_transparent(off, on)
+
+
 # ---------------------------------------------- injected host sync must fail
 def test_injected_host_sync_fails_contract():
     """The acceptance gate: fold a deliberate host re-entry into the round
-    body — the SAME lowering pipeline must now flunk the checker."""
+    body — the SAME lowering pipeline must now flunk the checker. (The
+    round body carries the telemetry buffer — telemetry defaults on — so
+    the leaky wrappers use the telemetry-on signature.)"""
     srv = _server("chain_fused", round_mode="single")
     inner = srv._round_fn.__wrapped__           # the un-jitted round body
     _, args = srv.round_executables()["round"]
 
-    def leaky(params, cache, dstate, c, gates):
-        cache, dstate, out = inner(params, cache, dstate, c, gates)
+    def leaky(params, cache, dstate, telem, c, gates):
+        cache, dstate, telem, out = inner(params, cache, dstate, telem, c, gates)
         jax.debug.print("n_acc={n}", n=out["n_acc"])   # deliberate host sync
-        return cache, dstate, out
+        return cache, dstate, telem, out
 
     con = HloContract.from_jitted(jax.jit(leaky), *args, name="leaky-round")
     assert con.host_callbacks                    # the callback IS in the HLO
     with pytest.raises(ContractViolation, match="callback"):
         con.assert_no_host_callbacks()
 
-    def leaky2(params, cache, dstate, c, gates):
-        cache, dstate, out = inner(params, cache, dstate, c, gates)
+    def leaky2(params, cache, dstate, telem, c, gates):
+        cache, dstate, telem, out = inner(params, cache, dstate, telem, c, gates)
         n = jax.pure_callback(
             lambda x: np.asarray(x), jax.ShapeDtypeStruct((2,), jnp.int32),
             out["n_acc"],
         )
-        return cache, dstate, dict(out, n_acc=n)
+        return cache, dstate, telem, dict(out, n_acc=n)
 
     con2 = HloContract.from_jitted(jax.jit(leaky2), *args, name="leaky2")
     with pytest.raises(ContractViolation):

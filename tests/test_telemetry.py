@@ -1,0 +1,296 @@
+"""Zero-sync serving telemetry (docs/observability.md): registry/exporter
+unit coverage plus the end-to-end invariants the design promises —
+
+  - every accepted token the device tallies is accounted for host-side:
+    ``accepted == delivered + overshoot + unrouted + discarded + leftover``
+    (the reconciliation identity), in all four proposal modes;
+  - overshoot tokens trimmed at retire are EXCLUDED from per-request
+    token counts and TPOT;
+  - telemetry on vs off changes NO runtime dispatch/sync counter
+    (the buffer rides existing executables — the static side of the same
+    claim lives in test_dispatch_contracts.py);
+  - the Prometheus text rendering, /metrics endpoint, Chrome trace JSON
+    and JSONL sink are well-formed.
+"""
+import dataclasses
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.dsia import layer_sparsity
+from repro.models import model as M
+from repro.serving.exporters import JsonlSink, MetricsHTTPServer
+from repro.serving.scheduler import Request, RequestScheduler, ServeLoop
+from repro.serving.server import BatchedSpecServer
+from repro.serving.telemetry import (
+    Histogram,
+    MetricsRegistry,
+    StatsView,
+    TraceRecorder,
+)
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+SPEC = layer_sparsity(CFG, 0.5)
+PROMPT = np.arange(1, 9, dtype=np.int32) % CFG.vocab_size
+
+
+def _server(mode, **kw):
+    kwargs = dict(max_batch=2, max_len=64, draft_k=4, tree_expansions=3,
+                  adaptive=False, donate=True)
+    if mode != "cascade_fused":
+        kwargs["draft_spec"] = SPEC
+    kwargs.update(kw)
+    return BatchedSpecServer(CFG, PARAMS, mode=mode, **kwargs)
+
+
+# ------------------------------------------------------------ registry units
+def test_counter_gauge_get_or_create_by_labels():
+    reg = MetricsRegistry()
+    reg.counter("hits", slot=0).inc()
+    reg.counter("hits", slot=0).inc(2)
+    reg.counter("hits", slot=1).inc()
+    assert reg.counter("hits", slot=0).value == 3
+    assert reg.counter("hits", slot=1).value == 1
+    reg.gauge("depth").set(7)
+    assert reg.gauge("depth").value == 7
+    snap = reg.snapshot()
+    assert snap["counters"]['hits{slot="0"}'] == 3
+    assert snap["gauges"]["depth"] == 7
+
+
+def test_stats_view_int_semantics():
+    reg = MetricsRegistry()
+    sv = StatsView(reg)
+    assert sv["steps"] == 0 and isinstance(sv["steps"], int)
+    sv["steps"] += 3
+    sv["draft_time"] += 0.25
+    assert sv["steps"] == 3 and isinstance(sv["steps"], int)
+    assert sv["draft_time"] == pytest.approx(0.25)
+    assert isinstance(sv["draft_time"], float)
+    # the view materializes every mapped counter at zero so a fresh
+    # registry snapshot is complete (dashboards see all-zero, not absent)
+    assert reg.counter("serve_host_syncs_total").value == 0
+    assert set(sv.copy()) == set(iter(sv))
+    assert sv.get("not_a_stat", "d") == "d" and "steps" in sv
+
+
+def test_histogram_bucket_property():
+    """Left-closed buckets: an observation equal to edge[i] lands in the
+    bucket that edge OPENS (index i+1); below it stays in bucket i. No
+    sample is lost or double-counted across the full edge sweep."""
+    edges = Histogram.log_edges(1e-4, 512.0)
+    assert edges == sorted(edges) and len(set(edges)) == len(edges)
+    h = Histogram(list(edges))
+    total = 0
+    for i, e in enumerate(edges):
+        assert h.bucket_index(e) == i + 1            # edge opens bucket i+1
+        assert h.bucket_index(e * (1 - 1e-12)) == i  # just below: bucket i
+        h.observe(e)
+        total += 1
+    h.observe(0.0)                                   # below lowest edge
+    h.observe(float(edges[-1]) * 4)                  # above highest edge
+    total += 2
+    assert sum(h.counts) == h.count == total
+    assert h.counts[0] == 1 and h.counts[-1] == 2    # top edge + overflow
+    # middle buckets got exactly one sample each (their opening edge)
+    assert all(c == 1 for c in h.counts[1:-1])
+
+
+def test_render_prometheus_histogram_cumulative():
+    reg = MetricsRegistry()
+    hist = reg.histogram("lat_seconds", edges=[0.1, 1.0, 10.0])
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):
+        hist.observe(v)
+    reg.counter("reqs", mode="x").inc(2)
+    text = reg.render_prometheus()
+    assert "# TYPE lat_seconds histogram" in text
+    assert "# TYPE reqs counter" in text
+    assert 'reqs{mode="x"} 2' in text
+    les = []
+    for line in text.splitlines():
+        if line.startswith("lat_seconds_bucket"):
+            les.append(float(line.rsplit(" ", 1)[1]))
+    assert les == sorted(les)                        # cumulative => monotone
+    assert les[-1] == 5                              # +Inf == count
+    assert "lat_seconds_count 5" in text
+    assert 'le="+Inf"' in text
+
+
+# --------------------------------------------------------------- exporters
+def test_metrics_http_endpoint():
+    reg = MetricsRegistry()
+    reg.counter("serve_rounds_total").inc(4)
+    with MetricsHTTPServer(reg, port=0) as srv:
+        assert srv.port > 0
+        base = f"http://127.0.0.1:{srv.port}"
+        assert srv.url == base + "/metrics"
+        with urllib.request.urlopen(srv.url) as r:
+            assert r.status == 200
+            assert "text/plain" in r.headers["Content-Type"]
+            body = r.read().decode()
+        assert "serve_rounds_total 4" in body
+        with urllib.request.urlopen(base + "/metrics.json") as r:
+            snap = json.loads(r.read().decode())
+        assert snap["counters"]["serve_rounds_total"] == 4
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(base + "/nope")
+
+
+def test_chrome_trace_and_jsonl_sink(tmp_path):
+    trace = TraceRecorder()
+    with trace.span("dispatch", round=1):
+        with trace.span("route"):
+            pass
+    trace.instant("sync")
+    doc = trace.to_json()
+    evs = doc["traceEvents"]
+    assert [e["ph"] for e in evs].count("X") == 2
+    for e in evs:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e)
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+    tr_path = tmp_path / "trace.json"
+    trace.save(str(tr_path))
+    assert json.loads(tr_path.read_text())["traceEvents"]
+
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    sink_path = tmp_path / "metrics.jsonl"
+    with JsonlSink(str(sink_path)) as sink:
+        sink.write({"kind": "round", "n": 1})
+        sink.write_registry(reg, step=2)
+    lines = [json.loads(x) for x in sink_path.read_text().splitlines()]
+    assert lines[0] == {"kind": "round", "n": 1}
+    assert lines[1]["kind"] == "metrics_snapshot" and lines[1]["step"] == 2
+    assert lines[1]["metrics"]["counters"]["c"] == 1
+
+
+# -------------------------------------------------- end-to-end reconciliation
+MODES = [
+    ("chain_fused", {"round_mode": "single", "sync_every": 2}),
+    ("chain_fused", {"round_mode": "split"}),
+    ("tree_fused", {"round_mode": "single"}),
+    ("legacy", {}),
+    ("cascade_fused", {}),
+]
+
+
+@pytest.mark.parametrize("mode,kw", MODES)
+def test_mode_accepted_matches_delivered(mode, kw):
+    """Per-slot device/host telemetry tallies must equal the token stream
+    the server actually returned — in every proposal mode."""
+    srv = _server(mode, **kw)
+    srv.add_request(0, PROMPT)
+    toks = []
+    for _ in range(5):
+        toks += srv.step().get(0, [])
+    toks += srv.flush().get(0, [])
+    tot = srv.telemetry_totals()
+    assert int(tot["accepted"][0]) == len(toks)
+    assert int(tot["accepted"][1]) == 0              # empty slot stays silent
+    assert int(tot["rounds"][0]) == 5
+    assert int(tot["budget_hist"][0].sum()) == 5     # one budget pick / round
+    summ = srv.metrics_summary()
+    assert summ["mode"] == mode and summ["rounds"] == 5
+    assert summ["accepted_per_slot"][0] == len(toks)
+    if mode == "cascade_fused":
+        # every level's routed/observed/accept rows are populated
+        assert np.asarray(tot["casc_obs"]).sum() > 0
+        acc = summ["cascade_acceptance"]
+        assert len(acc) == len(srv.bank)
+        assert all(a is None or 0.0 <= a <= 1.0 for a in acc)
+
+
+@pytest.mark.parametrize("mode,kw", MODES)
+def test_telemetry_onoff_runtime_parity(mode, kw):
+    """Runtime side of the transparency contract: telemetry on vs off must
+    produce identical round_dispatches/host_syncs AND identical tokens."""
+    runs = {}
+    for telem in (True, False):
+        srv = _server(mode, telemetry=telem, **kw)
+        srv.add_request(0, PROMPT)
+        toks = []
+        for _ in range(4):
+            toks += srv.step().get(0, [])
+        toks += srv.flush().get(0, [])
+        runs[telem] = (toks, srv.stats["round_dispatches"],
+                       srv.stats["host_syncs"], srv.stats["target_calls"])
+    assert runs[True] == runs[False]
+
+
+def test_serve_loop_overshoot_reconciliation():
+    """The pipelined loop: device-tallied accepted tokens reconcile exactly
+    with delivered + trimmed overshoot + unrouted + discarded + leftover,
+    and trimmed tokens never inflate per-request counts or TPOT."""
+    srv = _server("chain_fused", round_mode="single", sync_every=3,
+                  max_len=96)
+    sched = RequestScheduler(2)
+    trace = TraceRecorder()
+    loop = ServeLoop(srv, sched, trace=trace)
+    for i in range(4):
+        sched.submit(Request(prompt=np.arange(1, 7 + i, dtype=np.int32),
+                             max_new_tokens=9))
+    reqs = loop.run(max_steps=200)
+    assert len(reqs) == 4
+    assert all(len(r.generated) == 9 for r in reqs)  # trimmed to the cap
+    leftover = srv.flush()
+    tot = srv.telemetry_totals()
+    snap = srv.metrics.snapshot()["counters"]
+    delivered = sum(len(r.generated) for r in reqs)
+    accounted = (delivered
+                 + snap.get("serve_overshoot_tokens_total", 0)
+                 + snap.get("serve_unrouted_tokens_total", 0)
+                 + snap.get("serve_discarded_tokens_total", 0)
+                 + sum(len(v) for v in leftover.values()))
+    assert int(tot["accepted"].sum()) == accounted
+    # overshoot is excluded from the delivered-token counter ...
+    assert snap["serve_request_tokens_total"] == delivered == 4 * 9
+    # ... and from TPOT: any finite tpot stays consistent with delivered-1
+    for r in reqs:
+        assert r.ttft is not None and r.ttft >= 0
+        if r.tpot is not None:
+            assert r.tpot >= 0
+    # loop-phase spans + occupancy gauges came out of the same run
+    names = {e["name"] for e in trace.events}
+    assert {"admit", "dispatch", "route", "retire"} <= names
+    gauges = srv.metrics.snapshot()["gauges"]
+    assert gauges["serve_queue_depth"] == 0
+    assert gauges["serve_slots_occupied"] == 0
+
+
+def test_discarded_tokens_counted_on_slot_rebind():
+    srv = _server("chain_fused", round_mode="single", sync_every=1)
+    srv.add_request(0, PROMPT)
+    srv.step()
+    srv.flush()
+    pend = srv._out_buf.get(0, [])
+    srv.add_request(0, PROMPT)                       # rebind with buf pending
+    snap = srv.metrics.snapshot()["counters"]
+    assert snap.get("serve_discarded_tokens_total", 0) == len(pend)
+
+
+# --------------------------------------------- optional property-based sweep
+def test_histogram_random_observations_are_conserved():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+
+    edges = Histogram.log_edges(1e-3, 8.0)
+
+    @given(st.lists(st.floats(min_value=0, max_value=32.0,
+                              allow_nan=False), max_size=64))
+    def check(vals):
+        h = Histogram(list(edges))
+        for v in vals:
+            h.observe(v)
+        assert sum(h.counts) == h.count == len(vals)
+        for v in vals:
+            i = h.bucket_index(v)
+            assert (i == 0 or edges[i - 1] <= v)
+            assert (i == len(edges) or v < edges[i])
+
+    check()
