@@ -58,8 +58,17 @@ Three questions, one request stream:
      canary fails either way), with the telemetry-derived acceptance
      report riding along (``serve/telemetry_report``).
 
-All variants are lossless (greedy output == AR), so tokens/step and round
-latency are the whole story.
+  8. sampled-serving economics (docs/serving.md): a SAMPLED build
+     (stochastic verify fused into the same round executables) vs the
+     greedy build on the same stream — dispatch/sync discipline must be
+     IDENTICAL per round (exact equality: 1 donated dispatch, 1 drain per
+     single-mode round, sampled or not — the runtime twin of the sampled
+     dispatch contracts) and rounds/s must stay within 10%
+     (``serve/sampled_vs_greedy``; the smoke canary fails either way).
+
+All variants are lossless (greedy output == AR exactly; sampled output ==
+the target distribution in law), so tokens/step and round latency are the
+whole story.
 """
 from __future__ import annotations
 
@@ -326,6 +335,43 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
     if telem_speed < 0.95:
         print(f"WARNING: telemetry-on rounds/s below 0.95x of disabled "
               f"({telem_speed:.3f})")
+    # sampled-vs-greedy A/B (question 8): the stochastic verify is fused
+    # INTO the round executable (PRNG split + acceptance draws on device),
+    # so a sampled build must keep the exact single-dispatch discipline —
+    # round_dispatches == steps and host_syncs == steps on BOTH builds
+    # (sync_every=1: one drain per round, nothing in flight at admission)
+    # — and rounds/s within 10% of greedy on the same stream.
+    from repro.serving.sampler import SamplingParams
+
+    samp_kw = dict(mode="chain_fused", adaptive=False, round_mode="single",
+                   passes=2)
+    s_on = _serve_stream(cfg, params, prompts, n_tokens,
+                         sampling=SamplingParams(temperature=0.8, top_k=20,
+                                                 top_p=0.9, seed=7),
+                         **samp_kw)
+    s_off = _serve_stream(cfg, params, prompts, n_tokens, **samp_kw)
+    out["sampled_on"], out["sampled_off"] = s_on, s_off
+    sampled_speed = s_on["rounds_per_s"] / max(s_off["rounds_per_s"], 1e-9)
+    sampled_transparent = (
+        s_on["round_dispatches"] == s_on["steps"]
+        and s_off["round_dispatches"] == s_off["steps"]
+        and s_on["host_syncs"] == s_on["steps"]
+        and s_off["host_syncs"] == s_off["steps"]
+    )
+    print(csv_line(
+        "serve/sampled_vs_greedy", s_on["us_per_round"],
+        f"rounds_ratio={sampled_speed:.3f};"
+        f"transparent={int(sampled_transparent)};"
+        f"sampled_tps={s_on['tokens_per_step']:.3f};"
+        f"greedy_tps={s_off['tokens_per_step']:.3f};"
+        f"sampled_dispatches={s_on['round_dispatches']};"
+        f"sampled_syncs={s_on['host_syncs']}",
+    ))
+    out["sampled_rounds_ratio"] = sampled_speed
+    out["sampled_transparent"] = sampled_transparent
+    if sampled_speed < 0.90:
+        print(f"WARNING: sampled rounds/s below 0.90x of greedy "
+              f"({sampled_speed:.3f})")
     shard_parity = 1.0
     if smoke:
         shard_parity = _sharded_arm(out)
@@ -333,7 +379,8 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
                   or not (0.97 <= kv_parity <= 1.03)
                   or not (0.999 <= shard_parity <= 1.001)
                   or not (0.999 <= donate_parity <= 1.001)
-                  or telem_speed < 0.95 or not telem_transparent):
+                  or telem_speed < 0.95 or not telem_transparent
+                  or sampled_speed < 0.90 or not sampled_transparent):
         # the canaries must be able to FAIL: tokens/step is deterministic
         # for a fixed stream/model (no timing noise), so a clear
         # accept-ratio regression exits nonzero and marks the non-blocking
@@ -348,7 +395,9 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
             f"sharded/single tps {shard_parity:.4f}, "
             f"donated/nondonated tps {donate_parity:.4f}, "
             f"telemetry rounds/s {telem_speed:.3f} "
-            f"transparent={telem_transparent})"
+            f"transparent={telem_transparent}, "
+            f"sampled rounds/s {sampled_speed:.3f} "
+            f"transparent={sampled_transparent})"
         )
         err.results = out
         raise err

@@ -29,4 +29,14 @@ if [ -z "${REPRO_SKIP_LINT:-}" ]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis.lint src/repro
 fi
 
+# "sampled" first arg expands to the sampled-serving modules (the CI
+# sampled-serving leg runs this on both jax versions): host/device sampler
+# parity, kernel-vs-oracle replay, sampled e2e serving + greedy identity,
+# and the compiled dispatch contracts (which pin the sampled rounds too).
+if [ "${1:-}" = "sampled" ]; then
+  shift
+  set -- tests/test_sampler.py tests/test_verify_sampling.py \
+         tests/test_sampled_serving.py tests/test_dispatch_contracts.py "$@"
+fi
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -480,6 +480,8 @@ def cascade_rescore(
     quantize: Optional[str] = None,   # "int8": W8A8 MLP matmuls (static)
     attn_override: Optional[dict] = None,   # efficient-attention DSIA (static)
     attn_backend: Optional[str] = None,     # "pallas": kernel intra-tree pass
+    sampling: Optional[tuple] = None, # (temp (B,), top_k (B,), top_p (B,),
+                                      #  u (B, N+2)) -> stochastic rescore
 ):
     """ONE intermediate-verify dispatch of a stronger cascade level — the
     batched, on-device form of Alg. 1's level-to-level acceptance (the
@@ -517,6 +519,15 @@ def cascade_rescore(
     level's verdict on the INPUT node ``probe[b]`` (the level below's first
     own prediction), valid only when the probe's ancestors were all
     endorsed (DyTC's parent-accepted rule).
+
+    ``sampling`` switches on the level-to-level STOCHASTIC rescore rule:
+    a node is endorsed with prob q_level[parent](token) — one carried
+    uniform per node against this level's warped distribution — and the
+    hedge/extend continuations become inverse-CDF draws from q_level
+    instead of argmaxes (the last two uniforms). This is proposal shaping
+    only: losslessness is owned entirely by the FINAL target verify (the
+    stochastic tree walk in ``cascade_rescore_verify``), which is
+    distribution-preserving for ANY proposal tree.
     """
     B, N = tokens.shape
     b_idx = jnp.arange(B)
@@ -533,7 +544,14 @@ def cascade_rescore(
     has_parent = real & (parents >= 0)                           # non-root live
     p_clip = jnp.clip(parents, 0, N - 1)
     parent_nxt = jnp.take_along_axis(nxt, p_clip, axis=1)        # (B, N)
-    ok = jnp.where(has_parent, tokens == parent_nxt, True)
+    if sampling is None:
+        ok = jnp.where(has_parent, tokens == parent_nxt, True)
+    else:
+        s_temp, s_topk, s_topp, s_u = sampling
+        q_lvl = verify_lib.sampling_probs(logits, s_temp, s_topk, s_topp)
+        q_par = jnp.take_along_axis(q_lvl, p_clip[:, :, None], axis=1)
+        tok_p = jnp.take_along_axis(q_par, tokens[..., None], -1)[..., 0]
+        ok = jnp.where(has_parent, s_u[:, :N] < tok_p, True)
     bad = has_parent & ~ok
     eye = jnp.eye(N, dtype=bool)[None]
     anc_bad = (mask & ~eye & bad[:, None, :]).any(-1)            # bad proper ancestor
@@ -582,12 +600,20 @@ def cascade_rescore(
     has_hedge = cand.any(axis=1)
     hedge_src = jnp.argmin(jnp.where(cand, depth, N + 1), axis=1).astype(jnp.int32)
     hedge_at = jnp.take_along_axis(p_clip, hedge_src[:, None], 1)[:, 0]
-    hedge_tok = jnp.take_along_axis(parent_nxt, hedge_src[:, None], 1)[:, 0]
+    if sampling is None:
+        hedge_tok = jnp.take_along_axis(parent_nxt, hedge_src[:, None], 1)[:, 0]
+    else:
+        q_h = jnp.take_along_axis(q_lvl, hedge_at[:, None, None], axis=1)[:, 0]
+        hedge_tok = verify_lib._inv_cdf(q_h, s_u[:, N])
     state = _append(*state, jnp.where(has_hedge, hedge_at, 0),
                     hedge_tok, apply & has_hedge)[:-1]
     # extend: one child below the deepest fully-endorsed node
     frontier = jnp.argmax(jnp.where(endorsed, depth, -1), axis=1).astype(jnp.int32)
-    ext_tok = jnp.take_along_axis(nxt, frontier[:, None], 1)[:, 0]
+    if sampling is None:
+        ext_tok = jnp.take_along_axis(nxt, frontier[:, None], 1)[:, 0]
+    else:
+        q_f = jnp.take_along_axis(q_lvl, frontier[:, None, None], axis=1)[:, 0]
+        ext_tok = verify_lib._inv_cdf(q_f, s_u[:, N + 1])
     state = _append(*state, frontier, ext_tok, apply)[:-1]
     tokens, parents, depth, p_acc, mask, count = state
 
@@ -641,6 +667,43 @@ def verify_accept_commit(
     return new_cache, nxt, n_chain, new_pending
 
 
+def verify_accept_commit_sampled(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    pending: jax.Array,               # (B,) int32
+    chains: jax.Array,                # (B, k) int32
+    have: jax.Array,                  # (B,) int32
+    live: jax.Array,                  # (B,) bool
+    temp: jax.Array,                  # (B,) f32, <= 0 -> greedy point mass
+    top_k: jax.Array,                 # (B,) int32
+    top_p: jax.Array,                 # (B,) f32
+    u: jax.Array,                     # (B, k+1) f32 round uniforms
+):
+    """Sampled twin of ``verify_accept_commit``: the same fused target
+    round, but acceptance is Leviathan speculative sampling against the
+    warped target distribution (point-mass drafts — see
+    ``verify.sample_accept_chain_batched``) instead of argmax matching.
+    Slots with ``temp <= 0`` get a one-hot q, which reproduces the greedy
+    accept/bonus rule token-for-token. The uniforms arrive pre-split from
+    the carried per-slot PRNG key — no key ever leaves the device.
+    Returns (cache, n_chain, new_pending)."""
+    toks = jnp.concatenate([pending[:, None], chains], axis=1)   # (B, k+1)
+    logits, staged = M.decode_step(cfg, params, cache, toks)
+    B, K = chains.shape
+    q = verify_lib.sampling_probs(logits, temp, top_k, top_p)    # (B, k+1, V)
+    n_chain, nxt_tok = verify_lib.sample_accept_chain_batched(
+        chains, have, q, u[:, :K], u[:, K]
+    )
+    n_chain = jnp.where(live, n_chain, 0)
+    n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)    # + pending
+    path_idx = jnp.broadcast_to(
+        jnp.arange(K + 1, dtype=jnp.int32)[None], (B, K + 1)
+    )
+    new_cache = M.commit_cache(cfg, cache, staged, path_idx, n_acc)
+    return new_cache, n_chain, nxt_tok
+
+
 def tree_verify_accept_commit(
     cfg: ModelConfig,
     params: dict,
@@ -674,6 +737,43 @@ def tree_verify_accept_commit(
     return new_cache, path, n_acc, bonus
 
 
+def tree_verify_accept_commit_sampled(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    tokens: jax.Array,                # (B, N) int32 padded tree node tokens
+    parents: jax.Array,               # (B, N) int32, -1 at root/unused
+    depth: jax.Array,                 # (B, N) int32
+    mask: jax.Array,                  # (B, N, N) bool ancestor closure
+    count: jax.Array,                 # (B,) int32 real nodes per slot
+    live: jax.Array,                  # (B,) bool
+    temp: jax.Array,                  # (B,) f32, <= 0 -> greedy point mass
+    top_k: jax.Array,                 # (B,) int32
+    top_p: jax.Array,                 # (B,) f32
+    u: jax.Array,                     # (B, N) f32 one uniform per walk step
+    *,
+    attn_backend: Optional[str] = None,
+):
+    """Sampled twin of ``tree_verify_accept_commit``: the same fused target
+    decode + commit, but the accepted path comes from the stochastic tree
+    walk (``verify.sample_accept_tree_batched`` — the tree-native
+    speculative-sampling rule for point-mass drafts, distribution-
+    preserving at every step). temp <= 0 slots reproduce the greedy walk
+    token-for-token. Returns (cache, path, n_acc, next_tok)."""
+    qpos = cache["pos"][:, None] + depth
+    logits, staged = M.decode_step(
+        cfg, params, cache, tokens, tree_mask=mask, q_pos=qpos,
+        attn_backend=attn_backend,
+    )
+    q = verify_lib.sampling_probs(logits, temp, top_k, top_p)    # (B, N, V)
+    path, n_acc, nxt_tok = verify_lib.sample_accept_tree_batched(
+        tokens, parents, count, q, u
+    )
+    n_acc = jnp.where(live, n_acc, 0).astype(jnp.int32)
+    new_cache = M.commit_cache(cfg, cache, staged, path, n_acc)
+    return new_cache, path, n_acc, nxt_tok
+
+
 def cascade_rescore_verify(
     cfg: ModelConfig,
     level_params: dict,
@@ -694,6 +794,7 @@ def cascade_rescore_verify(
     quantize: Optional[str] = None,
     attn_override: Optional[dict] = None,
     attn_backend: Optional[str] = None,
+    sampling: Optional[tuple] = None,  # (temp, top_k, top_p, key (B,2) u32)
 ):
     """The cascade's LAST rescore dispatch with the target verify folded in:
     one jitted call runs the strongest level's ``cascade_rescore`` and then
@@ -704,31 +805,55 @@ def cascade_rescore_verify(
     placement on entry and exit (``_pin_batch``; no-op off-mesh), so the
     fused dispatch neither regathers the proposal nor reshards the cache it
     commits into.
-    Returns the rescore outputs followed by (cache, path, n_acc, bonus)."""
+
+    ``sampling`` carries the per-slot warp params and the slot PRNG keys:
+    the keys are split IN-dispatch into the stochastic-rescore uniforms
+    (N+2) plus the stochastic tree-walk uniforms (N), the rescore runs the
+    level-to-level stochastic rule, and the final verify becomes the
+    distribution-preserving stochastic walk against the warped TARGET
+    distribution — same dispatch count, zero host syncs, and an extra
+    trailing output: the advanced keys.
+
+    Returns the rescore outputs followed by (cache, path, n_acc, bonus)
+    [+ new_key when sampled]."""
     dax = data_axis()
     (tokens, parents, depth, p_acc, mask, count, probe, apply, alpha,
      live) = _pin_batch(
         (tokens, parents, depth, p_acc, mask, count, probe, apply, alpha,
          live), dax,
     )
+    N = tokens.shape[1]
+    resc_sampling = None
+    if sampling is not None:
+        s_temp, s_topk, s_topp, key = sampling
+        new_key, u = verify_lib.round_uniforms(key, 2 * N + 2)
+        resc_sampling = (s_temp, s_topk, s_topp, u[:, :N + 2])
     (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
      probe_valid) = cascade_rescore(
         cfg, level_params, cache, tokens, parents, depth, p_acc, mask, count,
         probe, apply, alpha, gates,
         quantize=quantize, attn_override=attn_override,
-        attn_backend=attn_backend,
+        attn_backend=attn_backend, sampling=resc_sampling,
     )
-    new_cache, path, n_acc, bonus = tree_verify_accept_commit(
-        cfg, target_params, cache, tokens, parents, depth, mask, count, live,
-        attn_backend=attn_backend,
-    )
+    if sampling is None:
+        new_cache, path, n_acc, bonus = tree_verify_accept_commit(
+            cfg, target_params, cache, tokens, parents, depth, mask, count,
+            live, attn_backend=attn_backend,
+        )
+    else:
+        new_cache, path, n_acc, bonus = tree_verify_accept_commit_sampled(
+            cfg, target_params, cache, tokens, parents, depth, mask, count,
+            live, s_temp, s_topk, s_topp, u[:, N + 2:],
+            attn_backend=attn_backend,
+        )
     (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
      probe_valid, path, n_acc, bonus) = _pin_batch(
         (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
          probe_valid, path, n_acc, bonus), dax,
     )
-    return (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
-            probe_valid, new_cache, path, n_acc, bonus)
+    out = (tokens, parents, depth, p_acc, mask, count, level_node, probe_ok,
+           probe_valid, new_cache, path, n_acc, bonus)
+    return out if sampling is None else out + (new_key,)
 
 
 # ===================================================== single-dispatch rounds
@@ -804,6 +929,7 @@ def chain_round(
     draft_kv: str = "recompute",
     max_ngram: int = 4,
     min_ngram: int = 1,
+    sampled: bool = False,
 ):
     """ONE fused, device-resident ``chain_fused`` serving round.
 
@@ -817,6 +943,13 @@ def chain_round(
     ``state`` carries ``pending (B,) i32``, ``live (B,) bool``,
     ``ctx (B, max_len) i32``, and the Eq. 4 estimator arrays ``alpha``,
     ``hist``, ``hist_n``, ``hist_ptr`` (see ``acceptance.ema_init``).
+    With ``sampled=True`` it additionally carries the per-slot sampling
+    state — ``key (B, 2) u32`` threefry keys plus ``temp``/``topk``/
+    ``topp`` warp params — and verification becomes speculative SAMPLING
+    acceptance (``verify_accept_commit_sampled``): the keys are split
+    in-dispatch, the advanced keys ride the carried state, and slots with
+    ``temp <= 0`` reproduce the greedy round token-for-token. Same
+    executable count, zero extra host syncs.
     Returns ``(cache, state, out)`` where ``out`` holds the round's
     accepted tokens: ``acc (B, k+1)`` (valid prefix ``n_acc``), plus
     ``pld_have``/``have`` for host-side stats.
@@ -861,9 +994,16 @@ def chain_round(
         chains, have = jax.lax.cond(
             jnp.any(limit > have), _draft, lambda ops: ops, (chains, have)
         )
-    new_cache, nxt, n_chain, new_pending = verify_accept_commit(
-        cfg, params, cache, pending, chains, have, live
-    )
+    if sampled:
+        state["key"], u = verify_lib.round_uniforms(state["key"], draft_k + 1)
+        new_cache, n_chain, new_pending = verify_accept_commit_sampled(
+            cfg, params, cache, pending, chains, have, live,
+            state["temp"], state["topk"], state["topp"], u,
+        )
+    else:
+        new_cache, nxt, n_chain, new_pending = verify_accept_commit(
+            cfg, params, cache, pending, chains, have, live
+        )
     n_acc = jnp.where(live, n_chain + 1, 0).astype(jnp.int32)
     acc_tok = jnp.concatenate([pending[:, None], chains], axis=1)
     state["ctx"] = _commit_ctx(ctx, n, acc_tok, n_acc)
@@ -910,13 +1050,18 @@ def tree_round(
     attn_backend: Optional[str] = None,
     max_ngram: int = 4,
     min_ngram: int = 1,
+    sampled: bool = False,
 ):
     """ONE fused, device-resident ``tree_fused`` (DyTC §4.2) serving round:
     PLD retrieval + tree seeding + the expansion scan + target verify + the
     vectorized accepted-path walk + cache/context commit + the Eq. 4 EMA
     update, all in a single jitted dispatch. Same carried ``state`` contract
     (and the same entry/exit ``_pin_batch`` placement pins on a mesh)
-    as ``chain_round``; ``out["acc"]`` holds the accepted path tokens."""
+    as ``chain_round``; ``out["acc"]`` holds the accepted path tokens.
+    ``sampled=True`` swaps the greedy accepted-path walk for the stochastic
+    tree walk (``tree_verify_accept_commit_sampled``) driven by carried
+    per-slot keys/warp params — see ``chain_round``; same dispatch story,
+    temp <= 0 slots stay token-identical to greedy."""
     dax = data_axis()
     state = _pin_batch(dict(state), dax)
     live = state["live"]
@@ -961,10 +1106,18 @@ def tree_round(
                 (tokens, parents, depth, p_acc, mask, count, first_neural),
             )
         )
-    new_cache, path, n_acc, bonus = tree_verify_accept_commit(
-        cfg, params, cache, tokens, parents, depth, mask, count, live,
-        attn_backend=attn_backend,
-    )
+    if sampled:
+        state["key"], u = verify_lib.round_uniforms(state["key"], bucket)
+        new_cache, path, n_acc, bonus = tree_verify_accept_commit_sampled(
+            cfg, params, cache, tokens, parents, depth, mask, count, live,
+            state["temp"], state["topk"], state["topp"], u,
+            attn_backend=attn_backend,
+        )
+    else:
+        new_cache, path, n_acc, bonus = tree_verify_accept_commit(
+            cfg, params, cache, tokens, parents, depth, mask, count, live,
+            attn_backend=attn_backend,
+        )
     acc_tok = jnp.take_along_axis(tokens, path, axis=1)          # (B, N)
     state["ctx"] = _commit_ctx(ctx, n, acc_tok, n_acc)
     state["pending"] = jnp.where(live, bonus, pending).astype(jnp.int32)

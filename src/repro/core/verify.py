@@ -82,6 +82,232 @@ def greedy_accept_tree_batched(
     return path, n_acc, bonus
 
 
+def sampling_probs(
+    logits: "jax.Array",            # (B, V) or (B, T, V) float logits
+    temperature: "jax.Array",       # (B,) float32, <= 0 -> greedy point mass
+    top_k: "jax.Array",             # (B,) int32, <= 0 -> no top-k filter
+    top_p: "jax.Array",             # (B,) float32, >= 1 -> no nucleus filter
+) -> "jax.Array":
+    """Warped target distribution q per slot (device twin of
+    ``serving.sampler.warp_probs``).
+
+    Exact-k top-k with stable index tie-break (jnp.argsort is stable, so
+    ties at the kth value keep the LOWEST token indices — matching
+    lax.top_k and the host reference), exclusive-cumulative top-p (keep a
+    token iff the sorted mass strictly BEFORE it is < top_p), and a greedy
+    reduction: slots with temperature <= 0 get a one-hot at argmax, which
+    makes every downstream accept/resample kernel reproduce the greedy
+    kernels token-for-token.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    squeeze = logits.ndim == 2
+    if squeeze:
+        logits = logits[:, None, :]
+    V = logits.shape[-1]
+    t = temperature[:, None, None]
+    k = top_k[:, None, None]
+    tp = top_p[:, None, None]
+    x = logits.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+    order = jnp.argsort(-x, axis=-1)            # stable: ties -> lower index
+    rank = jnp.argsort(order, axis=-1)
+    x = jnp.where((k <= 0) | (rank < k), x, -jnp.inf)
+    p = jax.nn.softmax(x, axis=-1)
+    p_sorted = jnp.take_along_axis(p, order, axis=-1)
+    cum = jnp.cumsum(p_sorted, axis=-1)
+    keep_sorted = (cum - p_sorted) < jnp.maximum(tp, 1e-9)
+    p = jnp.where(jnp.take_along_axis(keep_sorted, rank, axis=-1), p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, -1), V, dtype=p.dtype)
+    q = jnp.where(t <= 0.0, onehot, p)
+    return q[:, 0] if squeeze else q
+
+
+def _inv_cdf(p: "jax.Array", u: "jax.Array") -> "jax.Array":
+    """Deterministic inverse-CDF draw from unnormalized nonneg (B, V) mass
+    rows at uniforms u (B,) in [0, 1): first index whose inclusive
+    cumulative mass exceeds u * total."""
+    import jax.numpy as jnp
+
+    cum = jnp.cumsum(p, axis=-1)
+    return jnp.argmax(cum > u[:, None] * cum[:, -1:], axis=-1).astype(jnp.int32)
+
+
+def round_uniforms(keys: "jax.Array", n: int) -> Tuple["jax.Array", "jax.Array"]:
+    """Split per-slot threefry keys (B, 2) uint32 in-dispatch and draw n
+    uniforms per slot. Returns (new_keys (B, 2), u (B, n) float32). The keys
+    are carried device state — splitting here keeps the PRNG stream inside
+    the round executable, never host-materialized."""
+    import jax
+
+    sub = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (n,)))(sub[:, 1])
+    return sub[:, 0], u
+
+
+def sample_accept_chain_batched(
+    chains: "jax.Array",            # (B, K) int32 drafted chain tokens
+    have: "jax.Array",              # (B,) int32 real drafted tokens per slot
+    q: "jax.Array",                 # (B, K+1, V) warped target dist per position
+    u_acc: "jax.Array",             # (B, K) accept uniforms
+    u_next: "jax.Array",            # (B,) residual/bonus uniform
+) -> Tuple["jax.Array", "jax.Array"]:
+    """Batched speculative sampling acceptance for point-mass drafts.
+
+    The self-drafts in this repo are deterministic (PLD lookup / argmax
+    neural draft), i.e. the draft distribution is a one-hot at the proposed
+    token — so Leviathan's accept-with-prob min(1, q/p_d) reduces to
+    ``u < q[token]`` and the residual at the rejection point is q with the
+    rejected token zeroed, renormalized. All-accepted slots draw the bonus
+    token from the (K+1)-th row. Returns (n_chain (B,) accepted drafted
+    tokens, next_tok (B,) — residual resample or bonus draw).
+
+    With greedy (one-hot) q this is exactly the greedy rule: ``u < q[tok]``
+    accepts iff tok == argmax, and the inverse-CDF draw on a one-hot row
+    returns the argmax — token-identical to the greedy verify.
+    """
+    import jax.numpy as jnp
+
+    B, K = chains.shape
+    V = q.shape[-1]
+    tok_q = jnp.take_along_axis(q[:, :K], chains[..., None], axis=-1)[..., 0]
+    ok = (jnp.arange(K)[None, :] < have[:, None]) & (u_acc < tok_q)
+    n_chain = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    row = jnp.take_along_axis(q, n_chain[:, None, None], axis=1)[:, 0]
+    rejected = n_chain < have
+    rej_pos = jnp.minimum(n_chain, K - 1)
+    rej_tok = jnp.take_along_axis(chains, rej_pos[:, None], axis=1)[:, 0]
+    zero = rejected[:, None] & (jnp.arange(V)[None, :] == rej_tok[:, None])
+    resid = jnp.where(zero, 0.0, row)
+    use = jnp.where(resid.sum(-1, keepdims=True) > 0, resid, row)
+    return n_chain, _inv_cdf(use, u_next)
+
+
+def sample_accept_tree_batched(
+    tokens: "jax.Array",            # (B, N) int32 node tokens (node 0 = root)
+    parents: "jax.Array",           # (B, N) int32, -1 at root/unused
+    count: "jax.Array",             # (B,) int32 real nodes per slot
+    q: "jax.Array",                 # (B, N, V) warped target dist after each node
+    u: "jax.Array",                 # (B, N) one uniform per walk step
+) -> Tuple["jax.Array", "jax.Array", "jax.Array"]:
+    """Stochastic tree walk: the tree-native speculative-sampling rule for
+    point-mass drafts (SpecInfer-style sequential sibling fallback).
+
+    At each node the children c_1..c_m (index order, tokens distinct by
+    draft-time dedup) are tried in sequence, child c_j accepted with prob
+    q(x_j) / (1 - sum_{i<j} q(x_i)); equivalently ONE uniform per step
+    drives an inverse-CDF over the segments [q(x_1), .., q(x_m), rest]:
+    accept the first child whose inclusive cumulative mass exceeds u, and
+    if u falls in the trailing ``rest`` segment stop and resample from the
+    residual (q with every child token zeroed) using the leftover uniform
+    rescaled — exact in law AND deterministic given u, so the host oracle
+    (``sample_accept_tree_host``) replays it bit-for-bit.
+
+    One fori_loop of N masked steps (one MORE than the greedy walk: a
+    fully-accepted maximal chain still needs its leaf step to draw the
+    bonus token). Returns (path_idx (B, N), n_acc (B,), next_tok (B,)).
+    With greedy one-hot q the walk follows argmax-matching children and
+    the stop-step draw returns argmax — token-identical to
+    ``greedy_accept_tree_batched``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    B, N = tokens.shape
+    V = q.shape[-1]
+    b_idx = jnp.arange(B)
+    real = jnp.arange(N)[None, :] < count[:, None]
+
+    def step(s, carry):
+        node, n_acc, done, path, nxt_tok = carry
+        u_s = u[:, s]
+        q_v = jnp.take_along_axis(q, node[:, None, None], axis=1)[:, 0]
+        is_child = real & (parents == node[:, None])
+        m = jnp.take_along_axis(q_v, tokens, axis=1) * is_child
+        cum = jnp.cumsum(m, axis=1)
+        S = cum[:, -1]
+        hit = is_child & (m > 0) & (cum > u_s[:, None])
+        found = hit.any(axis=1) & ~done
+        child = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        # no child segment contains u -> stop here: residual resample with
+        # the leftover uniform rescaled onto [0, 1)
+        stop_now = ~done & ~found
+        u_left = jnp.clip((u_s - S) / jnp.maximum(1.0 - S, 1e-9),
+                          0.0, 1.0 - 1e-7)
+        resid = q_v.at[b_idx[:, None], jnp.where(is_child, tokens, V)].set(
+            0.0, mode="drop")
+        use = jnp.where(resid.sum(-1, keepdims=True) > 0, resid, q_v)
+        draw = _inv_cdf(use, u_left)
+        nxt_tok = jnp.where(stop_now, draw, nxt_tok)
+        path = path.at[b_idx, jnp.where(found, n_acc, N)].set(child, mode="drop")
+        node = jnp.where(found, child, node)
+        n_acc = n_acc + found.astype(jnp.int32)
+        return node, n_acc, done | ~found, path, nxt_tok
+
+    carry = (jnp.zeros((B,), jnp.int32), jnp.ones((B,), jnp.int32),
+             jnp.zeros((B,), bool), jnp.zeros((B, N), jnp.int32),
+             jnp.zeros((B,), jnp.int32))
+    _, n_acc, _, path, nxt_tok = jax.lax.fori_loop(0, N, step, carry)
+    return path, n_acc, nxt_tok
+
+
+def sample_accept_chain_host(
+    chains: np.ndarray, have: int, q: np.ndarray,
+    u_acc: np.ndarray, u_next: float,
+) -> Tuple[int, int]:
+    """Host oracle twin of ``sample_accept_chain_batched`` for ONE slot:
+    identical accept rule and inverse-CDF residual/bonus draw under the
+    same explicit uniforms. (chains (K,), q (K+1, V), u_acc (K,).)"""
+    K = len(chains)
+    n = 0
+    while n < min(have, K) and u_acc[n] < q[n, chains[n]]:
+        n += 1
+    row = np.asarray(q[n], np.float64).copy()
+    if n < have:
+        row[int(chains[n])] = 0.0
+        if row.sum() <= 0:
+            row = np.asarray(q[n], np.float64)
+    cum = np.cumsum(row)
+    return n, int(np.argmax(cum > u_next * cum[-1]))
+
+
+def sample_accept_tree_host(
+    tokens: np.ndarray, parents: np.ndarray, count: int,
+    q: np.ndarray, u: np.ndarray,
+) -> Tuple[List[int], int, int]:
+    """Host oracle twin of ``sample_accept_tree_batched`` for ONE slot: the
+    sequential sibling walk written plainly. Returns (path node indices
+    incl. root, n_acc, next_token)."""
+    path = [0]
+    node = 0
+    for s in range(len(tokens)):
+        u_s = float(u[s])
+        q_v = np.asarray(q[node], np.float64)
+        kids = [j for j in range(count) if parents[j] == node]
+        acc = 0.0
+        nxt = None
+        for c in kids:
+            mass = float(q_v[int(tokens[c])])
+            if mass > 0 and acc + mass > u_s:
+                nxt = c
+                break
+            acc += mass
+        if nxt is not None:
+            path.append(nxt)
+            node = nxt
+            continue
+        u_left = min(max((u_s - acc) / max(1.0 - acc, 1e-9), 0.0), 1.0 - 1e-7)
+        resid = q_v.copy()
+        for c in kids:
+            resid[int(tokens[c])] = 0.0
+        if resid.sum() <= 0:
+            resid = q_v
+        cum = np.cumsum(resid)
+        return path, len(path), int(np.argmax(cum > u_left * cum[-1]))
+    raise AssertionError("walk must stop within N steps")
+
+
 def spec_sample_chain(
     draft_tokens: np.ndarray,       # (k,)
     draft_probs: np.ndarray,        # (k, V) draft distribution per position

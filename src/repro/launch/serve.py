@@ -78,6 +78,13 @@ def run_batched(cfg, params, args) -> None:
     srv_kw: dict = {}
     if args.mode != "cascade_fused":
         srv_kw["draft_spec"] = layer_sparsity(cfg, 0.4)
+    if args.temperature > 0.0:
+        from repro.serving.sampler import SamplingParams
+
+        srv_kw["sampling"] = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed,
+        )
     srv = BatchedSpecServer(
         cfg, params, max_batch=args.batch, max_len=1024,
         mode=args.mode, mesh=mesh, **srv_kw,
@@ -131,6 +138,16 @@ def main():
                     help="batched server mode (with --mesh)")
     ap.add_argument("--batch", type=int, default=4,
                     help="batch slots (with --mesh)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (batched path; 0 = greedy, "
+                         "the default — lossless stochastic verify when >0)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter for sampled serving (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass for sampled serving (1.0 = off)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base PRNG seed for sampled serving (per-request "
+                         "streams derive from it and the admission order)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus /metrics on this port (0 = "
                          "ephemeral; batched path)")

@@ -248,18 +248,26 @@ def batch_specs(cfg: ModelConfig, mesh, *, global_batch: int) -> dict:
     return out
 
 
-def round_state_specs(mesh, *, global_batch: int) -> dict:
+def round_state_specs(mesh, *, global_batch: int, sampled: bool = False) -> dict:
     """Specs for the batched server's carried round state (congruent with
     ``BatchedSpecServer.dstate``): every array is per-slot, so everything
     shards on its leading batch dim along the data axes — the serving
     analogue of ``batch_specs`` (tensor parallelism lives in the params;
-    the per-slot EMAs/budgets/ctx are pure data parallelism)."""
+    the per-slot EMAs/budgets/ctx are pure data parallelism). ``sampled``
+    adds the per-slot sampling state a sampled build carries: the warp
+    params and the (B, 2) threefry key, all leading-batch like the rest."""
     bax = batch_axis(mesh, global_batch)
-    return {
+    out = {
         "pending": P(bax), "live": P(bax), "ctx": P(bax, None),
         "alpha": P(bax), "hist": P(bax, None),
         "hist_n": P(bax), "hist_ptr": P(bax),
     }
+    if sampled:
+        out.update({
+            "temp": P(bax), "topk": P(bax), "topp": P(bax),
+            "key": P(bax, None),
+        })
+    return out
 
 
 def telemetry_specs(schema: dict, mesh, *, global_batch: int) -> dict:

@@ -24,6 +24,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.sampler import SamplingParams
 from repro.serving.telemetry import (
     Histogram,
     MetricsRegistry,
@@ -41,6 +42,10 @@ _LAT_EDGES = Histogram.log_edges(1e-4, 512.0)
 class Request:
     prompt: np.ndarray
     max_new_tokens: int
+    # per-request sampling override; None inherits the server build's
+    # default. The loop forwards it verbatim at admission — a stochastic
+    # request on a greedy server build raises there.
+    sampling: Optional[SamplingParams] = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -219,7 +224,12 @@ class ServeLoop:
         with maybe_span(self.trace, "admit"):
             for slot in self.scheduler.admit():
                 req = self.scheduler.active[slot]
-                self.server.add_request(slot, req.prompt)
+                if req.sampling is not None:
+                    self.server.add_request(
+                        slot, req.prompt, sampling=req.sampling
+                    )
+                else:
+                    self.server.add_request(slot, req.prompt)
                 self._slot_req[slot] = req
                 self._req_slot[req.request_id] = slot
         # the "dispatch" span times the HOST side of a round (pipelined

@@ -130,6 +130,21 @@ concrete ``NamedSharding`` out-constraints, so aliasing survives lowering
 and no resharding collective runs between rounds. Greedy output is
 token-identical to the single-device server in every mode
 (tests/test_server_sharded.py). See docs/sharding.md.
+
+Sampled serving (``sampling=``)
+-------------------------------
+Pass ``sampling=SamplingParams(temperature, top_k, top_p, seed)`` and every
+mode verifies with the lossless stochastic accept/residual-resample rule
+against the WARPED target distribution instead of greedy argmax — chain
+rounds run the Leviathan accept, tree and cascade rounds the tree-native
+walk, and cascades additionally use the stochastic level-to-level rescore
+rule (core/verify.py, core/engine.py). The per-slot warp params and threefry
+PRNG keys are carried device state (``dstate``), split in-dispatch, never
+host-materialized, so sampling adds ZERO dispatches and ZERO host syncs to
+any round shape; ``add_request(..., sampling=...)`` overrides params per
+request. ``temperature=0`` requests stay token-identical to greedy, and a
+greedy build (``sampling=None``) compiles byte-identical executables to
+before sampling existed. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -153,7 +168,9 @@ from repro.core.engine import (
     tree_draft_scan,
     tree_round,
     tree_verify_accept_commit as _tree_verify_accept_commit,
+    tree_verify_accept_commit_sampled as _tree_verify_accept_commit_sampled,
     verify_accept_commit as _verify_accept_commit,
+    verify_accept_commit_sampled as _verify_accept_commit_sampled,
 )
 from repro.core.latency import (
     CostTracker,
@@ -163,9 +180,11 @@ from repro.core.latency import (
 )
 from repro.core.pld import PromptLookup
 from repro.core.tree import bucket_for, tree_seed_arrays
+from repro.core.verify import round_uniforms
 from repro.models import model as M
 from repro.serving import telemetry as TM
 from repro.serving.draft_bank import DraftBank
+from repro.serving.sampler import SamplingParams, warp_probs
 
 PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused", "cascade_fused")
 ROUND_MODES = ("auto", "single", "split")
@@ -199,10 +218,23 @@ class BatchedSpecServer:
         mesh=None,                     # jax Mesh: TP params + DP slots (docstring)
         telemetry: bool = True,        # device-carried round telemetry buffer
         metrics: Optional[TM.MetricsRegistry] = None,   # shared host registry
+        sampling: Optional[SamplingParams] = None,  # None -> greedy build
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
         self.draft_spec = draft_spec
+        # ---- sampled serving (module docstring): server-level defaults for
+        # the per-slot warp params; per-request overrides ride admission.
+        # A greedy build (None) compiles byte-identical executables to a
+        # pre-sampling server — nothing below may branch on `sampling`
+        # in a way that changes the greedy trace.
+        self.sampling = sampling
+        self._admit_seq = 0            # admissions so far (PRNG stream derivation)
+        self._base_key = None
+        if sampling is not None:
+            self._base_key = jax.random.PRNGKey(
+                sampling.seed if sampling.seed is not None else 0
+            )
         # ---- mesh placement (tensor-parallel params, data-parallel slots).
         # Shardings are held per-server and applied with explicit
         # device_put / NamedSharding constraints — never via the global
@@ -232,7 +264,10 @@ class BatchedSpecServer:
                 SH.cache_specs(cfg, mesh, global_batch=1)
             )
             self._state_sharding = ns_tree(
-                SH.round_state_specs(mesh, global_batch=max_batch)
+                SH.round_state_specs(
+                    mesh, global_batch=max_batch,
+                    sampled=sampling is not None,
+                )
             )
             self._replicated = NamedSharding(mesh, PartitionSpec())
             self.params = jax.device_put(self.params, self._param_sharding)
@@ -365,6 +400,15 @@ class BatchedSpecServer:
             "ctx": jnp.zeros((max_batch, max_len), jnp.int32),
             "alpha": al0, "hist": h0, "hist_n": hn0, "hist_ptr": hp0,
         }
+        if sampling is not None:
+            # per-slot sampling state carried INSIDE the fused rounds: warp
+            # params and the threefry keys the dispatches split themselves
+            self.dstate.update(
+                temp=jnp.zeros((max_batch,), jnp.float32),
+                topk=jnp.zeros((max_batch,), jnp.int32),
+                topp=jnp.ones((max_batch,), jnp.float32),
+                key=jnp.zeros((max_batch, 2), jnp.uint32),
+            )
         if mesh is not None:
             self.dstate = jax.device_put(self.dstate, self._state_sharding)
         self._prior_alpha = prior0
@@ -416,10 +460,10 @@ class BatchedSpecServer:
             functools.partial(M.write_slot, cfg), donate_argnums=don(0)
         )
 
-        def _admit(state, slot, ctx_row, last_logits):
+        def _admit(state, slot, ctx_row, last_logits, *samp):
             prior = jnp.float32(self._prior_alpha)
             W = state["hist"].shape[1]
-            return {
+            out = {
                 "pending": state["pending"].at[slot].set(
                     jnp.argmax(last_logits[0], -1).astype(jnp.int32)
                 ),
@@ -430,6 +474,16 @@ class BatchedSpecServer:
                 "hist_n": state["hist_n"].at[slot].set(0),
                 "hist_ptr": state["hist_ptr"].at[slot].set(0),
             }
+            if samp:
+                # sampled build: bind the request's (host-sampled) first
+                # token, warp params and PRNG key row to the slot
+                pend0, temp, topk, topp, key_row = samp
+                out["pending"] = state["pending"].at[slot].set(pend0)
+                out["temp"] = state["temp"].at[slot].set(temp)
+                out["topk"] = state["topk"].at[slot].set(topk)
+                out["topp"] = state["topp"].at[slot].set(topp)
+                out["key"] = state["key"].at[slot].set(key_row)
+            return out
 
         self._admit_fn = jax.jit(_admit, donate_argnums=don(0))
 
@@ -443,17 +497,54 @@ class BatchedSpecServer:
         self._tree_verify = jax.jit(functools.partial(
             _tree_verify_accept_commit, cfg, attn_backend=attn_backend,
         ), donate_argnums=don(1))
+        self._verify_sampled = None
+        self._tree_verify_sampled = None
+        if sampling is not None:
+            # split/legacy verify with the stochastic accept fused in: the
+            # slot keys are split into the round uniforms INSIDE the jitted
+            # dispatch and the advanced keys return as device arrays — the
+            # split round keeps its dispatch/sync counts exactly
+            def _sverify(p, cache, pending, chains, have, live,
+                         temp, topk, topp, key):
+                key, u = round_uniforms(key, draft_k + 1)
+                cache, n_chain, nxt = _verify_accept_commit_sampled(
+                    cfg, p, cache, pending, chains, have, live,
+                    temp, topk, topp, u,
+                )
+                return cache, n_chain, nxt, key
+
+            self._verify_sampled = jax.jit(_sverify, donate_argnums=don(1))
+            if self.tree_bucket:
+                bucket = int(self.tree_bucket)
+
+                def _stree_verify(p, cache, tok, par, dep, msk, cnt, live,
+                                  temp, topk, topp, key):
+                    key, u = round_uniforms(key, bucket)
+                    cache, path, n_acc, bonus = (
+                        _tree_verify_accept_commit_sampled(
+                            cfg, p, cache, tok, par, dep, msk, cnt, live,
+                            temp, topk, topp, u, attn_backend=attn_backend,
+                        )
+                    )
+                    return cache, path, n_acc, bonus, key
+
+                self._tree_verify_sampled = jax.jit(
+                    _stree_verify, donate_argnums=don(1)
+                )
         self._round_fn = None
         if self.round_mode == "single":
             pld_kw = {
                 "max_ngram": self.pld.max_ngram, "min_ngram": self.pld.min_ngram,
             }
+            # `sampled=True` is only passed on sampled builds so a greedy
+            # build's round partial (and its trace) stays byte-identical
+            samp_kw = {"sampled": True} if sampling is not None else {}
             if mode == "chain_fused":
                 fn = functools.partial(
                     chain_round, cfg, draft_k=draft_k,
                     use_draft=draft_spec is not None, adaptive=adaptive,
                     min_obs=min_obs, t_min=float(t_min),
-                    draft_kv=self.draft_kv, **pld_kw,
+                    draft_kv=self.draft_kv, **pld_kw, **samp_kw,
                 )
             else:
                 fn = functools.partial(
@@ -464,7 +555,7 @@ class BatchedSpecServer:
                     use_draft=draft_spec is not None, adaptive=adaptive,
                     min_obs=min_obs, t_min=float(t_min),
                     draft_kv=self.draft_kv, attn_backend=attn_backend,
-                    **pld_kw,
+                    **pld_kw, **samp_kw,
                 )
             if mesh is not None:
                 # belt-and-braces on a mesh: pin the donated outputs to the
@@ -540,8 +631,21 @@ class BatchedSpecServer:
         self.stats: TM.StatsView = TM.StatsView(self.metrics)
 
     # ------------------------------------------------------------ admission
-    def add_request(self, slot: int, prompt: np.ndarray) -> None:
+    def add_request(
+        self, slot: int, prompt: np.ndarray,
+        sampling: Optional[SamplingParams] = None,
+    ) -> None:
         """Prefill one prompt into a batch slot.
+
+        ``sampling`` overrides the server build's default ``SamplingParams``
+        for this request (sampled builds only — a stochastic request on a
+        greedy build raises, since the greedy executables cannot honor it;
+        ``temperature=0`` overrides are accepted anywhere and stay
+        token-identical to greedy). On sampled builds the request's FIRST
+        token is drawn host-side from the warped prefill distribution
+        (admission is already a sync point) and its slot PRNG stream is
+        seeded from ``sampling.seed`` or derived from the server's base
+        seed and the admission counter.
 
         The fresh B=1 cache is donated into the prefill dispatch and the
         batched cache into one jitted dynamic-update (``models.model
@@ -553,6 +657,14 @@ class BatchedSpecServer:
         before re-binding to collect them — ``ServeLoop`` drains and routes
         under the old mapping before every admission, so it never loses
         any."""
+        if (sampling is not None and not sampling.greedy
+                and self.sampling is None):
+            raise ValueError(
+                "stochastic per-request sampling requires a sampled server "
+                "build — construct BatchedSpecServer(..., sampling="
+                "SamplingParams(...)); this greedy build compiled only the "
+                "greedy round executables"
+            )
         if self._inflight:
             self._drain()
         dropped = self._out_buf.pop(slot, None)
@@ -577,9 +689,42 @@ class BatchedSpecServer:
         # estimator seeded with the draft's cold-start prior
         row = np.zeros(self.max_len, np.int32)
         row[: len(prompt)] = prompt
-        self.dstate = self._admit_fn(self.dstate, slot_d, jnp.asarray(row), last)
+        samp_args = ()
+        first: Optional[int] = None
+        if self.sampling is not None:
+            eff = sampling if sampling is not None else self.sampling
+            if eff.seed is not None:
+                key = jax.random.PRNGKey(eff.seed)
+            else:
+                key = jax.random.fold_in(self._base_key, self._admit_seq)
+            self._admit_seq += 1
+            # the request's FIRST token is sampled from the warped prefill
+            # distribution right here — admission is already a host sync
+            # point — with the same inverse-CDF rule the device uses; the
+            # consumed subkey advances the slot stream like a round split
+            key, sub = jax.random.split(key)
+            u0 = float(jax.random.uniform(sub))
+            q0 = warp_probs(
+                np.asarray(last)[0], eff.temperature, eff.top_k, eff.top_p
+            )
+            cum = np.cumsum(q0)
+            first = int(np.argmax(cum > u0 * cum[-1]))
+            samp_args = (
+                jnp.asarray(first, jnp.int32),
+                jnp.asarray(max(eff.temperature, 0.0), jnp.float32),
+                jnp.asarray(eff.top_k, jnp.int32),
+                jnp.asarray(eff.top_p, jnp.float32),
+                key,
+            )
+            if not eff.greedy:
+                self.metrics.counter("serve_sampled_requests_total").inc()
+        self.dstate = self._admit_fn(
+            self.dstate, slot_d, jnp.asarray(row), last, *samp_args
+        )
         # host mirrors (split/legacy/cascade rounds + inspection)
-        self.pending[slot] = int(np.argmax(np.asarray(last)[0]))
+        self.pending[slot] = (
+            int(np.argmax(np.asarray(last)[0])) if first is None else first
+        )
         self.contexts[slot] = [int(t) for t in prompt]
         self.live[slot] = True
         # slot estimators restart with the draft's cold-start prior —
@@ -693,11 +838,26 @@ class BatchedSpecServer:
         fn = self._rescore_fns.get(level)
         if fn is None:
             lvl = self.bank.levels[level]
-            fn = jax.jit(functools.partial(
+            base = functools.partial(
                 cascade_rescore, self.cfg, quantize=lvl.quantize,
                 attn_override=lvl.attn_override,
                 attn_backend=self.attn_backend,
-            ))
+            )
+            if self.sampling is not None:
+                inner = base
+
+                def base(lp, cache, tk, pr, dp, pa, mk, ct, probe, apply,
+                         alphas, gates, temp, topk, topp, key):
+                    # stochastic level-to-level rescore: the slot keys split
+                    # in-dispatch into the N endorse draws + hedge +
+                    # extension uniforms; advanced keys come back last
+                    key, u = round_uniforms(key, tk.shape[1] + 2)
+                    out = inner(lp, cache, tk, pr, dp, pa, mk, ct, probe,
+                                apply, alphas, gates,
+                                sampling=(temp, topk, topp, u))
+                    return out + (key,)
+
+            fn = jax.jit(base)
             self._rescore_fns[level] = fn
         return fn
 
@@ -715,6 +875,18 @@ class BatchedSpecServer:
                 attn_override=lvl.attn_override,
                 attn_backend=self.attn_backend,
             )
+            if self.sampling is not None:
+                # forward the trailing (temp, top_k, top_p, key) as the
+                # fused call's sampling tuple; the keys split in-dispatch
+                # (2N+2 uniforms: stochastic rescore + stochastic walk) and
+                # the 13-tuple grows a trailing new_key output
+                inner_rv = base
+
+                def base(lp, p, cache, tk, pr, dp, pa, mk, ct, probe, apply,
+                         alphas, gates, live, temp, topk, topp, key):
+                    return inner_rv(lp, p, cache, tk, pr, dp, pa, mk, ct,
+                                    probe, apply, alphas, gates, live,
+                                    sampling=(temp, topk, topp, key))
             if self.telemetry:
                 # the telemetry buffer rides the cascade's FINAL (donated)
                 # dispatch: the per-slot tallies, routing rows, and THIS
@@ -732,9 +904,12 @@ class BatchedSpecServer:
 
                 def wrapped(lp, p, cache, tk, pr, dp, pa, mk, ct, probe,
                             apply, alphas, gates, live, telem, pld_have,
-                            budget):
+                            budget, *samp):
+                    # *samp = (temp, topk, topp, key) on sampled builds —
+                    # appended after the telemetry args so the greedy
+                    # signature (and its trace) is untouched
                     out = base(lp, p, cache, tk, pr, dp, pa, mk, ct, probe,
-                               apply, alphas, gates, live)
+                               apply, alphas, gates, live, *samp)
                     # out[5]=count, out[7]=probe_ok, out[8]=probe_valid,
                     # out[11]=n_acc (see cascade_rescore_verify)
                     telem = TM.accumulate_cascade(
@@ -790,6 +965,15 @@ class BatchedSpecServer:
         toks_i = jnp.zeros((B,), jnp.int32)
         chains = jnp.zeros((B, k), jnp.int32)
         live = jnp.zeros((B,), bool)
+        # sampled builds: the trailing (temp, topk, topp, key) every
+        # sampled split/cascade dispatch takes (single mode carries them
+        # inside dstate, so its entry needs nothing extra)
+        samp_ex = ()
+        if self.sampling is not None:
+            samp_ex = (
+                jnp.ones((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+                jnp.ones((B,), jnp.float32), jnp.zeros((B, 2), jnp.uint32),
+            )
         if self.round_mode == "single":
             if self.telemetry:
                 return {"round": (self._round_fn, (
@@ -799,14 +983,17 @@ class BatchedSpecServer:
             return {"round": (self._round_fn, (
                 self.params, self.cache, self.dstate, self._c_dev, self._gates
             ))}
+        verify_args = (self.params, self.cache, toks_i, chains, toks_i, live)
+        verify_entry = (
+            (self._verify_sampled, verify_args + samp_ex)
+            if self.sampling is not None else (self._verify, verify_args)
+        )
         if self.mode == "legacy":
             out = {"decode": (self._decode, (
                 self.params, self.cache, jnp.zeros((B, 1), jnp.int32),
                 self._gates,
             ))}
-            out["verify"] = (self._verify, (
-                self.params, self.cache, toks_i, chains, toks_i, live,
-            ))
+            out["verify"] = verify_entry
             return out
         if self.mode == "chain_fused":
             out = {}
@@ -815,9 +1002,7 @@ class BatchedSpecServer:
                     self.params, self.cache, toks_i, chains, toks_i,
                     jnp.full((B,), k, jnp.int32), self._gates,
                 ))
-            out["verify"] = (self._verify, (
-                self.params, self.cache, toks_i, chains, toks_i, live,
-            ))
+            out["verify"] = verify_entry
             return out
         # tree_fused / cascade_fused (split): a seeded padded tree
         from repro.core.tree import tree_seed_arrays as _seed
@@ -829,6 +1014,11 @@ class BatchedSpecServer:
         scal = (jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
                 jnp.asarray(0.5, jnp.float32),
                 jnp.asarray(self.t_min, jnp.float32))
+        tv_args = (self.params, self.cache, tok, par, dep, msk, cnt, live)
+        tv_entry = (
+            (self._tree_verify_sampled, tv_args + samp_ex)
+            if self.sampling is not None else (self._tree_verify, tv_args)
+        )
         if self.mode == "tree_fused":
             out = {}
             if self.draft_spec is not None:
@@ -836,9 +1026,7 @@ class BatchedSpecServer:
                     self._tree_draft_fn(self.tree_expansions),
                     (self.params, self.cache) + tree + scal + (self._gates,),
                 )
-            out["tree_verify"] = (self._tree_verify, (
-                self.params, self.cache, tok, par, dep, msk, cnt, live,
-            ))
+            out["tree_verify"] = tv_entry
             return out
         bank = self.bank
         probe = jnp.full((B,), -1, jnp.int32)
@@ -853,7 +1041,8 @@ class BatchedSpecServer:
             for lvl in bank.rescorers[:-1]:
                 out[f"rescore_l{lvl.index}"] = (self._rescore_fn(lvl.index), (
                     lvl.params, self.cache) + tree
-                    + (probe, apply, alphas, self._level_gates[lvl.index]),
+                    + (probe, apply, alphas, self._level_gates[lvl.index])
+                    + samp_ex,
                 )
             last = bank.rescorers[-1]
             telem_args = (
@@ -862,12 +1051,10 @@ class BatchedSpecServer:
             out["rescore_verify"] = (self._rescore_verify_fn(last.index), (
                 last.params, self.params, self.cache) + tree
                 + (probe, apply, alphas, self._level_gates[last.index], live)
-                + telem_args,
+                + telem_args + samp_ex,
             )
         else:
-            out["tree_verify"] = (self._tree_verify, (
-                self.params, self.cache, tok, par, dep, msk, cnt, live,
-            ))
+            out["tree_verify"] = tv_entry
         return out
 
     # ------------------------------------------------------------- stepping
@@ -1054,6 +1241,19 @@ class BatchedSpecServer:
             "drafted_per_slot": tot["drafted"].tolist(),
             "pld_tokens_per_slot": tot["pld_tokens"].tolist(),
         }
+        # accept-rate telemetry (meaningful for greedy AND sampled runs;
+        # the sampled CI leg pins that sampling reports them): mean tokens
+        # committed per round, and the fraction of PROPOSED (PLD + neural)
+        # tokens the verify accepted — the always-emitted pending/bonus
+        # token is excluded from the numerator
+        out["sampled"] = self.sampling is not None
+        rounds_t = float(tot["rounds"].sum())
+        acc_t = float(tot["accepted"].sum())
+        prop_t = float(tot["drafted"].sum() + tot["pld_tokens"].sum())
+        out["accepted_per_round"] = acc_t / rounds_t if rounds_t else None
+        out["spec_accept_rate"] = (
+            (acc_t - rounds_t) / prop_t if prop_t > 0 else None
+        )
         if "casc_obs" in tot:
             obs = tot["casc_obs"].sum(axis=1)
             acc = tot["casc_accept"].sum(axis=1)
@@ -1106,14 +1306,27 @@ class BatchedSpecServer:
             return self._step_cascade()
         chains, have = self._propose()
         t0 = time.perf_counter()
-        new_cache, nxt, n_chain, new_pending = jax.block_until_ready(
-            self._verify(
-                self.params, self.cache,
-                jnp.asarray(self.pending, jnp.int32),
-                jnp.asarray(chains), jnp.asarray(have),
-                jnp.asarray(self.live),
+        if self.sampling is not None:
+            ds = self.dstate
+            new_cache, n_chain, new_pending, new_key = jax.block_until_ready(
+                self._verify_sampled(
+                    self.params, self.cache,
+                    jnp.asarray(self.pending, jnp.int32),
+                    jnp.asarray(chains), jnp.asarray(have),
+                    jnp.asarray(self.live),
+                    ds["temp"], ds["topk"], ds["topp"], ds["key"],
+                )
             )
-        )
+            self.dstate = dict(ds, key=new_key)
+        else:
+            new_cache, _, n_chain, new_pending = jax.block_until_ready(
+                self._verify(
+                    self.params, self.cache,
+                    jnp.asarray(self.pending, jnp.int32),
+                    jnp.asarray(chains), jnp.asarray(have),
+                    jnp.asarray(self.live),
+                )
+            )
         dt = time.perf_counter() - t0
         self.stats["host_syncs"] += 1
         self.stats["device_wait"] += dt
@@ -1200,11 +1413,25 @@ class BatchedSpecServer:
             self.costs.observe("tree_draft", dt, tokens=expansions)
 
         t0 = time.perf_counter()
-        new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
-            self.params, self.cache,
-            d_tokens, d_parents, d_depth, d_mask, d_count,
-            jnp.asarray(self.live),
-        ))
+        if self.sampling is not None:
+            ds = self.dstate
+            new_cache, path, n_acc, bonus, new_key = jax.block_until_ready(
+                self._tree_verify_sampled(
+                    self.params, self.cache,
+                    d_tokens, d_parents, d_depth, d_mask, d_count,
+                    jnp.asarray(self.live),
+                    ds["temp"], ds["topk"], ds["topp"], ds["key"],
+                )
+            )
+            self.dstate = dict(ds, key=new_key)
+        else:
+            new_cache, path, n_acc, bonus = jax.block_until_ready(
+                self._tree_verify(
+                    self.params, self.cache,
+                    d_tokens, d_parents, d_depth, d_mask, d_count,
+                    jnp.asarray(self.live),
+                )
+            )
         dt = time.perf_counter() - t0
         self.cache = new_cache
         self.stats["target_calls"] += 1
@@ -1340,11 +1567,19 @@ class BatchedSpecServer:
         probe = first_neural
         level_node = np.full(self.B, -1, np.int32)
         live_d = jnp.asarray(self.live)
+        # sampled builds: the slot keys thread sequentially through every
+        # rescore dispatch (each splits its own uniforms in-dispatch and
+        # returns the advanced keys) — mutable so each hop rebinds samp[3]
+        samp = None
+        if self.sampling is not None:
+            ds = self.dstate
+            samp = [ds["temp"], ds["topk"], ds["topp"], ds["key"]]
         if use_rescore.any():
             apply = jnp.asarray(use_rescore & self.live)
             for lvl in bank.rescorers:
                 r = lvl.index
                 last_level = lvl is bank.rescorers[-1]
+                extra = tuple(samp) if samp is not None else ()
                 t0 = time.perf_counter()
                 if last_level and self.telemetry:
                     # the donated telemetry buffer rides the final fused
@@ -1357,30 +1592,47 @@ class BatchedSpecServer:
                         probe, apply, jnp.asarray(resc_alphas[r]),
                         self._level_gates[r], live_d,
                         self._telem_dev, jnp.asarray(have),
-                        jnp.asarray(exp_b),
+                        jnp.asarray(exp_b), *extra,
                     ))
-                    (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
-                     lvl_node_d, probe_ok, probe_valid,
-                     new_cache, path, n_acc, bonus, self._telem_dev) = out
+                    if samp is not None:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid,
+                         new_cache, path, n_acc, bonus, samp[3],
+                         self._telem_dev) = out
+                    else:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid,
+                         new_cache, path, n_acc, bonus,
+                         self._telem_dev) = out
                 elif last_level:
                     out = jax.block_until_ready(self._rescore_verify_fn(r)(
                         lvl.params, self.params, self.cache,
                         d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
                         probe, apply, jnp.asarray(resc_alphas[r]),
-                        self._level_gates[r], live_d,
+                        self._level_gates[r], live_d, *extra,
                     ))
-                    (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
-                     lvl_node_d, probe_ok, probe_valid,
-                     new_cache, path, n_acc, bonus) = out
+                    if samp is not None:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid,
+                         new_cache, path, n_acc, bonus, samp[3]) = out
+                    else:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid,
+                         new_cache, path, n_acc, bonus) = out
                 else:
                     out = jax.block_until_ready(self._rescore_fn(r)(
                         lvl.params, self.cache,
                         d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
                         probe, apply, jnp.asarray(resc_alphas[r]),
-                        self._level_gates[r],
+                        self._level_gates[r], *extra,
                     ))
-                    (d_tokens, d_parents, d_depth, d_p_acc, d_mask, d_count,
-                     lvl_node_d, probe_ok, probe_valid) = out
+                    if samp is not None:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid,
+                         samp[3]) = out
+                    else:
+                        (d_tokens, d_parents, d_depth, d_p_acc, d_mask,
+                         d_count, lvl_node_d, probe_ok, probe_valid) = out
                 dt = time.perf_counter() - t0
                 self.stats["rescore_dispatches"] += 1
                 self.stats["host_syncs"] += 1
@@ -1416,11 +1668,22 @@ class BatchedSpecServer:
             self.cache = new_cache
         else:
             t0 = time.perf_counter()
-            new_cache, path, n_acc, bonus = jax.block_until_ready(self._tree_verify(
-                self.params, self.cache,
-                d_tokens, d_parents, d_depth, d_mask, d_count,
-                live_d,
-            ))
+            if samp is not None:
+                new_cache, path, n_acc, bonus, samp[3] = jax.block_until_ready(
+                    self._tree_verify_sampled(
+                        self.params, self.cache,
+                        d_tokens, d_parents, d_depth, d_mask, d_count,
+                        live_d, *samp,
+                    )
+                )
+            else:
+                new_cache, path, n_acc, bonus = jax.block_until_ready(
+                    self._tree_verify(
+                        self.params, self.cache,
+                        d_tokens, d_parents, d_depth, d_mask, d_count,
+                        live_d,
+                    )
+                )
             dt = time.perf_counter() - t0
             self.cache = new_cache
             self.stats["target_calls"] += 1
@@ -1490,6 +1753,10 @@ class BatchedSpecServer:
                         self._telem_host["casc_accept"][0, b] += int(
                             fn in node_set
                         )
+        if samp is not None:
+            # the advanced slot keys (threaded through every dispatch above)
+            # re-enter the carried state as device arrays — no host copy
+            self.dstate = dict(self.dstate, key=samp[3])
         self.pending = np.where(self.live, bonus.astype(np.int64), self.pending)
         self.stats["steps"] += 1
         return out_toks

@@ -30,6 +30,7 @@ from repro.analysis.contracts import (
 from repro.config import get_config
 from repro.core.dsia import layer_sparsity
 from repro.models import model as M
+from repro.serving.sampler import SamplingParams
 from repro.serving.server import BatchedSpecServer
 
 CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
@@ -206,6 +207,61 @@ def test_cascade_static_matches_runtime_counters():
                   + srv.stats["rescore_dispatches"])
     assert dispatches == rounds * n
     assert srv.stats["target_calls"] == rounds     # folded, still counted
+
+
+# ----------------------------------------------------- sampled-build rounds
+SAMPLED = SamplingParams(temperature=0.8, top_k=20, top_p=0.9, seed=1)
+
+
+@pytest.mark.parametrize("mode,trip", [("chain_fused", DRAFT_K),
+                                       ("tree_fused", EXPANSIONS)])
+def test_sampled_single_round_keeps_the_contract(mode, trip):
+    """Stochastic verify must not cost a dispatch: the sampled single-mode
+    round is STILL one donated executable with the same scan trip counts
+    and no host re-entry — the PRNG split and acceptance draws are fused
+    into the round body, never round-tripped through the host."""
+    srv = _server(mode, round_mode="single", sampling=SAMPLED)
+    cons = server_round_contracts(srv)
+    assert srv.expected_dispatches_per_round() == 1
+    assert set(cons) == {"round"}
+    con = cons["round"]
+    con.assert_donated(at_least=3)
+    con.assert_no_host_callbacks()
+    con.assert_trip_count(trip)
+    con.assert_trip_count(CFG.num_layers)
+
+
+def test_sampled_split_round_keeps_the_contract():
+    srv = _server("chain_fused", round_mode="split", sampling=SAMPLED)
+    cons = server_round_contracts(srv)
+    assert len(cons) == srv.expected_dispatches_per_round() == 2
+    cons["chain_draft"].assert_no_host_callbacks().assert_trip_count(DRAFT_K)
+    cons["verify"].assert_donated(at_least=1).assert_no_host_callbacks()
+
+
+def test_sampled_cascade_round_keeps_the_contract():
+    srv = _server("cascade_fused", sampling=SAMPLED)
+    L = len(srv.bank)
+    cons = server_round_contracts(srv)
+    assert len(cons) == srv.expected_dispatches_per_round() == max(L, 2)
+    assert len(cons) <= L + 1
+    for con in cons.values():
+        con.assert_no_host_callbacks()
+    cons["rescore_verify"].assert_donated(at_least=1)
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("chain_fused", {"round_mode": "single"}),
+    ("cascade_fused", {}),
+])
+def test_sampled_telemetry_is_dispatch_transparent(mode, kw):
+    """Telemetry transparency holds on sampled builds too: same executables,
+    trip counts, and no-weaker donation with the buffer on."""
+    off = server_round_contracts(
+        _server(mode, telemetry=False, sampling=SAMPLED, **kw)
+    )
+    on = server_round_contracts(_server(mode, sampling=SAMPLED, **kw))
+    assert_telemetry_transparent(off, on)
 
 
 # -------------------------------------------------------- parser edge cases

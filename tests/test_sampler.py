@@ -1,0 +1,164 @@
+"""Host/device sampler parity and the warp-rule regressions.
+
+``serving.sampler.warp_probs`` (host) and ``core.verify.sampling_probs``
+(device) must agree bit-for-bit on the warped target distribution — the
+sampled serving stack replays device draws on the host through the host
+twin, so any drift in top-k tie handling or top-p boundary semantics is a
+correctness bug, not a tolerance issue. The regressions pinned here:
+
+  - top-k ties at the kth value keep EXACTLY k tokens (stable rank — the
+    pre-fix host sampler kept every tied token, i.e. > k);
+  - top-p keeps a token iff the cumulative sorted mass strictly BEFORE it
+    is < top_p, which equals ``searchsorted(cum, top_p, side='left') + 1``
+    kept tokens even when top_p lands exactly on a cumulative boundary.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.verify import sampling_probs
+from repro.serving.sampler import SamplingParams, sample_token, warp_probs
+
+
+def _device_probs(logits, temperature, top_k, top_p):
+    B = logits.shape[0] if logits.ndim > 1 else 1
+    x = jnp.asarray(np.atleast_2d(logits), jnp.float32)
+    q = sampling_probs(
+        x,
+        jnp.full((B,), temperature, jnp.float32),
+        jnp.full((B,), top_k, jnp.int32),
+        jnp.full((B,), top_p, jnp.float32),
+    )
+    return np.asarray(q)
+
+
+# ------------------------------------------------------------ SamplingParams
+def test_sampling_params_greedy_flag():
+    assert SamplingParams().greedy
+    assert SamplingParams(temperature=0.0).greedy
+    assert SamplingParams(temperature=-1.0).greedy
+    assert not SamplingParams(temperature=0.7).greedy
+    p = SamplingParams(temperature=0.7, top_k=40, top_p=0.9, seed=3)
+    assert dataclasses.asdict(p) == {
+        "temperature": 0.7, "top_k": 40, "top_p": 0.9, "seed": 3
+    }
+
+
+# ------------------------------------------------------- top-k tie handling
+def test_top_k_ties_keep_exactly_k_tokens():
+    """Regression: logits tied at the kth value must keep EXACTLY k tokens
+    (lowest token indices win), never every tied token."""
+    logits = np.array([0.0, 0.0, 0.0, 0.0, 1.0])
+    q = warp_probs(logits, temperature=1.0, top_k=2)
+    assert (q > 0).sum() == 2
+    assert q[4] > 0 and q[0] > 0          # argmax + the lowest-index tie
+    assert q[1] == q[2] == q[3] == 0.0
+
+
+def test_top_k_all_tied():
+    q = warp_probs(np.zeros(6), temperature=1.0, top_k=3)
+    np.testing.assert_allclose(q, [1 / 3, 1 / 3, 1 / 3, 0, 0, 0])
+
+
+def test_top_k_zero_disables():
+    logits = np.array([0.3, -1.0, 2.0])
+    np.testing.assert_allclose(
+        warp_probs(logits, 1.0, top_k=0),
+        np.exp(logits) / np.exp(logits).sum(), atol=1e-12,
+    )
+
+
+# -------------------------------------------------- top-p boundary semantics
+def test_top_p_exact_boundary_matches_searchsorted():
+    """Regression: when top_p EQUALS a cumulative mass, the kept-token count
+    must be ``searchsorted(cum, top_p, side='left') + 1`` — the boundary
+    token that closes the nucleus is kept, the next one is not."""
+    p = np.array([0.5, 0.3, 0.2])
+    logits = np.log(p)
+    for top_p, want_kept in [(0.8, 2), (0.5, 1), (0.79, 2), (0.81, 3),
+                             (1.0, 3), (0.2, 1)]:
+        q = warp_probs(logits, temperature=1.0, top_p=top_p)
+        kept = int((q > 0).sum())
+        cum = np.cumsum(np.sort(p)[::-1])
+        assert kept == want_kept == (
+            np.searchsorted(cum, min(top_p, 1.0), side="left") + 1
+            if top_p < 1.0 else len(p)
+        ), (top_p, q)
+
+
+def test_top_p_always_keeps_argmax():
+    q = warp_probs(np.array([5.0, 0.0, -3.0]), temperature=1.0, top_p=1e-6)
+    assert q[0] == 1.0 and (q > 0).sum() == 1
+
+
+# ------------------------------------------------------------ greedy routing
+def test_temperature_zero_is_point_mass():
+    logits = np.array([0.1, 4.0, -2.0, 4.0])   # tie -> lowest index
+    q = warp_probs(logits, temperature=0.0)
+    np.testing.assert_array_equal(q, [0, 1, 0, 0])
+    assert sample_token(logits, temperature=0.0) == 1
+
+
+# --------------------------------------------------- host/device parity pins
+@pytest.mark.parametrize("temperature,top_k,top_p", [
+    (1.0, 0, 1.0), (0.7, 5, 1.0), (1.3, 0, 0.9), (0.8, 7, 0.85),
+    (1.0, 3, 0.5), (0.0, 4, 0.9),
+])
+def test_host_device_warp_parity(temperature, top_k, top_p):
+    rng = np.random.default_rng(11)
+    V, B = 33, 6
+    logits = rng.normal(size=(B, V)).astype(np.float32)
+    # inject exact ties so the stable tie-break is actually exercised
+    logits[:, 5] = logits[:, 9] = logits[:, 17]
+    dev = _device_probs(logits, temperature, top_k, top_p)
+    for b in range(B):
+        host = warp_probs(logits[b], temperature, top_k, top_p)
+        np.testing.assert_array_equal(dev[b] > 0, host > 0), b
+        np.testing.assert_allclose(dev[b], host, atol=1e-6)
+
+
+def test_device_per_slot_params_and_3d_logits():
+    """One dispatch, heterogeneous per-slot params (incl. a greedy slot) —
+    each row must match its own host warp."""
+    rng = np.random.default_rng(3)
+    B, T, V = 3, 4, 19
+    logits = rng.normal(size=(B, T, V)).astype(np.float32)
+    temp = np.array([0.8, 0.0, 1.2], np.float32)
+    topk = np.array([4, 0, 0], np.int32)
+    topp = np.array([1.0, 1.0, 0.7], np.float32)
+    q = np.asarray(sampling_probs(
+        jnp.asarray(logits), jnp.asarray(temp), jnp.asarray(topk),
+        jnp.asarray(topp),
+    ))
+    assert q.shape == (B, T, V)
+    for b in range(B):
+        for t in range(T):
+            host = warp_probs(logits[b, t], temp[b], int(topk[b]), topp[b])
+            np.testing.assert_allclose(q[b, t], host, atol=1e-6)
+
+
+# ---------------------------------------------------------- seeded sampling
+def test_sample_token_seed_determinism():
+    logits = np.random.default_rng(5).normal(size=64)
+    draws = [
+        sample_token(logits, temperature=0.9, top_k=10, top_p=0.95,
+                     rng=np.random.default_rng(123))
+        for _ in range(3)
+    ]
+    assert len(set(draws)) == 1
+    q = warp_probs(logits, 0.9, 10, 0.95)
+    assert q[draws[0]] > 0
+
+
+def test_sample_token_matches_inverse_cdf_replay():
+    """The host draw is the same inverse-CDF rule the device uses: replaying
+    the uniform must reproduce the token exactly."""
+    logits = np.random.default_rng(9).normal(size=32)
+    rng = np.random.default_rng(77)
+    u = np.random.default_rng(77).random()
+    tok = sample_token(logits, temperature=1.1, top_p=0.8, rng=rng)
+    q = warp_probs(logits, 1.1, 0, 0.8)
+    cum = np.cumsum(q)
+    assert tok == int(np.argmax(cum > u * cum[-1]))

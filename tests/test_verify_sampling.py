@@ -1,8 +1,19 @@
-"""Speculative sampling (chain) is distribution-preserving (lossless in law)."""
+"""Speculative sampling (chain) is distribution-preserving (lossless in law),
+and the fused device kernels replay their host oracles bit-for-bit under
+identical explicit uniforms."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.verify import spec_sample_chain, softmax
+from repro.core.verify import (
+    greedy_accept_tree_batched,
+    sample_accept_chain_batched,
+    sample_accept_chain_host,
+    sample_accept_tree_batched,
+    sample_accept_tree_host,
+    spec_sample_chain,
+    softmax,
+)
 
 
 def test_accept_all_when_identical():
@@ -44,3 +55,136 @@ def test_marginal_distribution_preserved():
         counts[tok] += 1
     emp = counts / trials
     assert np.abs(emp - target[0]).max() < 0.015
+
+
+# ------------------------------------------------ device vs host oracle: chain
+def _rand_probs(g, *shape):
+    return softmax(g.normal(size=shape)).astype(np.float32)
+
+
+def test_chain_kernel_matches_host_oracle():
+    """Same chains, same q, same explicit uniforms -> identical (n, token)
+    for every slot, across the full range of ``have`` (0..K)."""
+    g = np.random.default_rng(101)
+    B, K, V = 16, 4, 12
+    for trial in range(8):
+        chains = g.integers(0, V, size=(B, K)).astype(np.int32)
+        have = (np.arange(B) % (K + 1)).astype(np.int32)
+        q = _rand_probs(g, B, K + 1, V)
+        # sharpen some rows so both accept and reject branches are hit
+        q[::3] = _rand_probs(g, (B + 2) // 3, K + 1, V) ** 3
+        q /= q.sum(-1, keepdims=True)
+        u_acc = g.random(size=(B, K)).astype(np.float32)
+        u_next = g.random(size=(B,)).astype(np.float32)
+        n_dev, t_dev = sample_accept_chain_batched(
+            jnp.asarray(chains), jnp.asarray(have), jnp.asarray(q),
+            jnp.asarray(u_acc), jnp.asarray(u_next),
+        )
+        n_dev, t_dev = np.asarray(n_dev), np.asarray(t_dev)
+        for b in range(B):
+            n_h, t_h = sample_accept_chain_host(
+                chains[b], int(have[b]), q[b], u_acc[b], float(u_next[b])
+            )
+            assert (n_dev[b], t_dev[b]) == (n_h, t_h), (trial, b)
+
+
+def test_chain_kernel_greedy_onehot_reduction():
+    """One-hot q (the temperature<=0 warp) reduces the stochastic rule to
+    the greedy one: accept iff drafted token == argmax, next = argmax."""
+    g = np.random.default_rng(5)
+    B, K, V = 8, 3, 9
+    am = g.integers(0, V, size=(B, K + 1)).astype(np.int32)
+    q = np.eye(V, dtype=np.float32)[am]                      # (B, K+1, V)
+    chains = am[:, :K].copy()
+    chains[1, 0] = (chains[1, 0] + 1) % V                    # reject at pos 0
+    chains[2, 2] = (chains[2, 2] + 1) % V                    # reject at pos 2
+    have = np.full((B,), K, np.int32)
+    n, t = sample_accept_chain_batched(
+        jnp.asarray(chains), jnp.asarray(have), jnp.asarray(q),
+        jnp.asarray(g.random(size=(B, K)), dtype=jnp.float32),
+        jnp.asarray(g.random(size=(B,)), dtype=jnp.float32),
+    )
+    n, t = np.asarray(n), np.asarray(t)
+    want_n = np.array([(chains[b] == am[b, :K]).cumprod().sum()
+                       for b in range(B)])
+    np.testing.assert_array_equal(n, want_n)
+    # residual of a one-hot with the hit token zeroed falls back to the row
+    # itself -> the greedy next token either way
+    np.testing.assert_array_equal(t, am[np.arange(B), n])
+
+
+# ------------------------------------------------- device vs host oracle: tree
+def _tree(shape: str, N: int, V: int, g) -> tuple:
+    """A padded (tokens, parents, count) tree with sibling-distinct tokens
+    (matching draft-time dedup)."""
+    if shape == "chain":
+        parents = np.arange(-1, N - 1)
+    elif shape == "star":
+        parents = np.array([-1] + [0] * (N - 1))
+    else:  # mixed: two children under root, then alternate attachment
+        parents = np.array([-1, 0, 0] + [1 + (i % 2) for i in range(N - 3)])
+        parents[4:] = [g.integers(1, i) for i in range(4, N)]
+    tokens = np.zeros(N, np.int64)
+    for p in np.unique(parents):
+        kids = np.flatnonzero(parents == p)
+        tokens[kids] = g.choice(V, size=len(kids), replace=False)
+    return tokens.astype(np.int32), parents.astype(np.int32), N
+
+
+@pytest.mark.parametrize("shape", ["chain", "star", "mixed"])
+@pytest.mark.parametrize("N", [4, 7])
+def test_tree_kernel_matches_host_oracle(shape, N):
+    g = np.random.default_rng(hash((shape, N)) % 2**32)
+    B, V = 12, 10
+    toks = np.zeros((B, N), np.int32)
+    pars = np.full((B, N), -1, np.int32)
+    count = np.zeros((B,), np.int32)
+    for b in range(B):
+        t, p, c = _tree(shape, N, V, g)
+        # vary the live node count so padding is exercised too
+        c = N if b % 3 else max(2, N - 2)
+        toks[b], pars[b], count[b] = t, p, c
+    q = _rand_probs(g, B, N, V)
+    q[1::2] = q[1::2] ** 4                      # sharp rows: high-accept slots
+    q /= q.sum(-1, keepdims=True)
+    u = g.random(size=(B, N)).astype(np.float32)
+    path_d, n_d, t_d = sample_accept_tree_batched(
+        jnp.asarray(toks), jnp.asarray(pars), jnp.asarray(count),
+        jnp.asarray(q), jnp.asarray(u),
+    )
+    path_d, n_d, t_d = np.asarray(path_d), np.asarray(n_d), np.asarray(t_d)
+    for b in range(B):
+        path_h, n_h, tok_h = sample_accept_tree_host(
+            toks[b], pars[b], int(count[b]), q[b], u[b]
+        )
+        assert n_d[b] == n_h, (shape, N, b)
+        assert t_d[b] == tok_h, (shape, N, b)
+        np.testing.assert_array_equal(path_d[b, : n_h], path_h), (shape, b)
+
+
+def test_tree_kernel_greedy_onehot_reduction():
+    """One-hot q -> the sampled walk reproduces greedy_accept_tree_batched
+    exactly (path, count, and bonus token)."""
+    g = np.random.default_rng(23)
+    B, N, V = 9, 6, 8
+    toks = np.zeros((B, N), np.int32)
+    pars = np.full((B, N), -1, np.int32)
+    count = np.full((B,), N, np.int32)
+    for b, shape in enumerate(["chain", "star", "mixed"] * 3):
+        toks[b], pars[b], _ = _tree(shape, N, V, g)
+    am = g.integers(0, V, size=(B, N)).astype(np.int32)
+    # force some argmax rows onto actual child tokens so walks go deep
+    am[:, 0] = toks[:, 1]
+    q = np.eye(V, dtype=np.float32)[am]
+    u = g.random(size=(B, N)).astype(np.float32)
+    path_s, n_s, t_s = sample_accept_tree_batched(
+        jnp.asarray(toks), jnp.asarray(pars), jnp.asarray(count),
+        jnp.asarray(q), jnp.asarray(u),
+    )
+    path_g, n_g, bonus = greedy_accept_tree_batched(
+        jnp.asarray(toks), jnp.asarray(pars), jnp.asarray(count),
+        jnp.asarray(am),
+    )
+    np.testing.assert_array_equal(np.asarray(n_s), np.asarray(n_g))
+    np.testing.assert_array_equal(np.asarray(t_s), np.asarray(bonus))
+    np.testing.assert_array_equal(np.asarray(path_s), np.asarray(path_g))
