@@ -1,0 +1,182 @@
+"""Heavy-tailed load generator for the batched serving benchmarks.
+
+Fixed prompt sets exercise the steady state; production serving lives in
+the transient: Poisson bursts of requests whose prompt and output lengths
+are heavy-tailed (a few very long prompts among many short ones — the
+regime block-paged KV + chunked prefill exists for). This module builds
+DynaNDE-style seeded traces and drives a ``ServeLoop`` with them:
+
+  * arrivals — Poisson process (exponential inter-arrival gaps), measured
+    in ROUNDS of the serving loop so the trace is deterministic and
+    machine-independent;
+  * prompt/output lengths — lognormal (median/sigma parameterized), the
+    standard heavy-tailed length model, clipped to the server's limits.
+
+``run_trace`` submits each request when its arrival round comes up,
+steps the loop once per round, and records the queue-depth series; the
+returned report carries TTFT / queue-depth / throughput digests pulled
+from the PR 8 telemetry (request-level ttft fields + the registry's
+``serve_queue_depth`` gauge), so bench arms can print one line per
+server variant. Everything is seeded — two runs of the same trace on
+token-identical servers route identical tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving import Request, RequestScheduler, ServeLoop
+
+
+@dataclasses.dataclass
+class TraceRequest:
+    arrival_round: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+def heavy_tailed_trace(
+    *,
+    vocab: int,
+    n_requests: int,
+    seed: int,
+    rate: float = 0.5,            # mean arrivals per serving round
+    prompt_median: int = 24,
+    prompt_sigma: float = 0.9,    # lognormal shape: ~1 gives a fat tail
+    prompt_max: int = 256,
+    out_median: int = 12,
+    out_sigma: float = 0.6,
+    out_max: int = 64,
+) -> List[TraceRequest]:
+    """A seeded Poisson + lognormal-length request trace."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs: List[TraceRequest] = []
+    for _ in range(n_requests):
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        plen = int(np.clip(
+            round(float(rng.lognormal(np.log(prompt_median), prompt_sigma))),
+            1, prompt_max,
+        ))
+        olen = int(np.clip(
+            round(float(rng.lognormal(np.log(out_median), out_sigma))),
+            1, out_max,
+        ))
+        prompt = rng.integers(1, vocab, size=plen).astype(np.int32)
+        reqs.append(TraceRequest(int(t), prompt, olen))
+    return reqs
+
+
+def run_trace(
+    server,
+    trace: List[TraceRequest],
+    *,
+    max_batch: int,
+    max_rounds: int = 10_000,
+    sampling=None,
+) -> Dict:
+    """Drive ``server`` with ``trace`` through a ``ServeLoop``.
+
+    Returns a report dict: the finished ``Request`` objects (token streams
+    + latency fields), the per-round queue-depth series, per-round routed
+    token counts, and summary digests (TTFT quantiles over the rounds
+    clock, peak queue depth, tokens/round)."""
+    sched = RequestScheduler(max_batch=max_batch)
+    loop = ServeLoop(server, sched)
+    pending = sorted(trace, key=lambda r: r.arrival_round)
+    i = 0
+    rounds = 0
+    queue_depth: List[int] = []
+    routed_per_round: List[int] = []
+    admitted_round: Dict[int, int] = {}          # id(request) -> round
+    first_token_round: Dict[int, int] = {}
+    reqs: List[Request] = []
+    while (i < len(pending) or sched.busy) and rounds < max_rounds:
+        while i < len(pending) and pending[i].arrival_round <= rounds:
+            tr = pending[i]
+            req = Request(
+                prompt=tr.prompt, max_new_tokens=tr.max_new_tokens,
+                sampling=sampling,
+            )
+            sched.submit(req)
+            admitted_round[id(req)] = rounds
+            reqs.append(req)
+            i += 1
+        out = loop.step_once()
+        routed = 0
+        for req in reqs:
+            if req.generated and id(req) not in first_token_round:
+                first_token_round[id(req)] = rounds
+        for toks in out.values():
+            routed += len(toks)
+        routed_per_round.append(routed)
+        queue_depth.append(len(sched.queue))
+        rounds += 1
+    finished = sched.finished
+    ttfts = [r.ttft for r in finished if r.ttft is not None]
+    ttft_rounds = [
+        first_token_round[id(r)] - admitted_round[id(r)]
+        for r in reqs if id(r) in first_token_round
+    ]
+    total_tokens = sum(len(r.generated) for r in finished)
+    return {
+        "finished": finished,
+        "rounds": rounds,
+        "total_tokens": total_tokens,
+        "tokens_per_round": total_tokens / max(rounds, 1),
+        "queue_depth": queue_depth,
+        "peak_queue_depth": max(queue_depth, default=0),
+        "mean_queue_depth": float(np.mean(queue_depth)) if queue_depth else 0.0,
+        "routed_per_round": routed_per_round,
+        # TTFT on the wall clock (PR 8 request telemetry) and on the
+        # deterministic rounds clock (admission round -> first-token round)
+        "ttft_s_p50": float(np.median(ttfts)) if ttfts else 0.0,
+        "ttft_s_p99": float(np.quantile(ttfts, 0.99)) if ttfts else 0.0,
+        "ttft_rounds_p50": float(np.median(ttft_rounds)) if ttft_rounds else 0.0,
+        "ttft_rounds_max": max(ttft_rounds, default=0),
+        "token_streams": {
+            idx: list(r.generated) for idx, r in enumerate(finished)
+        },
+    }
+
+
+def summarize(report: Dict) -> str:
+    """One-line digest for csv_line derived fields."""
+    return (
+        f"tokens_per_round={report['tokens_per_round']:.3f};"
+        f"ttft_rounds_p50={report['ttft_rounds_p50']:.1f};"
+        f"ttft_rounds_max={report['ttft_rounds_max']};"
+        f"peak_queue={report['peak_queue_depth']};"
+        f"mean_queue={report['mean_queue_depth']:.2f}"
+    )
+
+
+def main(seed: int = 0, n_requests: int = 24) -> Optional[Dict]:
+    """Standalone smoke: a bursty trace against the tiny bench model."""
+    import dataclasses as dc
+    import sys
+
+    sys.path.insert(0, "benchmarks")
+    from common import CACHE_DIR, bench_config, csv_line, trained_params
+
+    from repro.serving import BatchedSpecServer
+
+    cfg = dc.replace(bench_config(), num_layers=4)
+    cfg, params = trained_params(cfg, steps=12, cache_dir=CACHE_DIR + "_smoke")
+    trace = heavy_tailed_trace(
+        vocab=cfg.vocab_size, n_requests=n_requests, seed=seed,
+        prompt_max=96, out_max=24,
+    )
+    srv = BatchedSpecServer(
+        cfg, params, max_batch=4, max_len=256, draft_k=4,
+        mode="chain_fused", adaptive=False,
+    )
+    rep = run_trace(srv, trace, max_batch=4)
+    print(csv_line("serve/load_gen_smoke", 0.0, summarize(rep)))
+    return rep
+
+
+if __name__ == "__main__":
+    main()

@@ -373,12 +373,16 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
         print(f"WARNING: sampled rounds/s below 0.90x of greedy "
               f"({sampled_speed:.3f})")
     shard_parity = 1.0
+    paged_parity, paged_overlap = 1.0, 1
     if smoke:
         shard_parity = _sharded_arm(out)
+        paged_parity, paged_overlap = _paged_arm(cfg, params, out)
     if smoke and (ratio < 0.9 or c_ratio < 0.9
                   or not (0.97 <= kv_parity <= 1.03)
                   or not (0.999 <= shard_parity <= 1.001)
                   or not (0.999 <= donate_parity <= 1.001)
+                  or not (0.999 <= paged_parity <= 1.001)
+                  or paged_overlap <= 0
                   or telem_speed < 0.95 or not telem_transparent
                   or sampled_speed < 0.90 or not sampled_transparent):
         # the canaries must be able to FAIL: tokens/step is deterministic
@@ -397,11 +401,112 @@ def main(n_tokens: int = 32, smoke: bool = False) -> dict:
             f"telemetry rounds/s {telem_speed:.3f} "
             f"transparent={telem_transparent}, "
             f"sampled rounds/s {sampled_speed:.3f} "
-            f"transparent={sampled_transparent})"
+            f"transparent={sampled_transparent}, "
+            f"paged/dense tps {paged_parity:.4f}, "
+            f"chunked overlap tokens {paged_overlap})"
         )
         err.results = out
         raise err
     return out
+
+
+def _paged_arm(cfg, params, out: dict):
+    """Question 9 (docs/paging.md): block-paged KV + chunked prefill.
+
+    Two canaries on the SAME bursty heavy-tailed load-gen trace:
+
+      a. ``serve/paged_vs_dense`` — a paged server must route EXACTLY the
+         token streams of the dense server (paging is placement, never
+         math), with tokens/round parity recorded into the trend;
+      b. ``serve/chunked_prefill_overlap`` — with ``prefill_chunk`` on, a
+         LONG prompt admitted mid-stream must NOT stall the loop: other
+         slots keep routing tokens during the rounds its prompt is still
+         chunk-prefilling (overlap tokens > 0 — the non-blocking-admission
+         headline), with rounds + TTFT-in-rounds reported alongside.
+    """
+    import load_gen
+
+    from repro.serving import BatchedSpecServer
+
+    trace = load_gen.heavy_tailed_trace(
+        vocab=cfg.vocab_size, n_requests=16, seed=11,
+        rate=0.7, prompt_max=96, out_max=16,
+    )
+    runs = {}
+    for name, kw in (
+        ("dense", {}),
+        ("paged", {"paged": True, "page_size": 64}),
+    ):
+        srv = BatchedSpecServer(
+            cfg, params, max_batch=MAX_BATCH, max_len=256, draft_k=DRAFT_K,
+            draft_spec=layer_sparsity(cfg, 0.5), mode="chain_fused",
+            adaptive=False, **kw,
+        )
+        t0 = time.perf_counter()
+        runs[name] = load_gen.run_trace(srv, trace, max_batch=MAX_BATCH)
+        runs[name]["us_per_round"] = (
+            (time.perf_counter() - t0) * 1e6 / max(runs[name]["rounds"], 1)
+        )
+    exact = runs["paged"]["token_streams"] == runs["dense"]["token_streams"]
+    parity = (runs["paged"]["tokens_per_round"]
+              / max(runs["dense"]["tokens_per_round"], 1e-9)) if exact else 0.0
+    out["paged_run"], out["dense_run"] = (
+        {k: v for k, v in runs[n].items()
+         if k not in ("finished", "token_streams")}
+        for n in ("paged", "dense")
+    )
+    # trend-shaped rows (tokens_per_step + us_per_round): the tokens/round
+    # parity of the paged build rides BENCH_smoke.json alongside the other
+    # serve variants
+    for name in ("dense", "paged"):
+        out[f"loadgen_{name}"] = {
+            "tokens_per_step": runs[name]["tokens_per_round"],
+            "us_per_round": runs[name]["us_per_round"],
+        }
+    print(csv_line(
+        "serve/paged_vs_dense", runs["paged"]["us_per_round"],
+        f"tps_parity={parity:.4f};exact_streams={int(exact)};"
+        + load_gen.summarize(runs["paged"]),
+    ))
+    out["paged_tps_parity"] = parity
+
+    # (b) three short prompts decode while one long prompt chunk-prefills
+    rng = np.random.default_rng(5)
+    shorts = [
+        load_gen.TraceRequest(0, rng.integers(
+            1, cfg.vocab_size, size=12).astype(np.int32), 24)
+        for _ in range(3)
+    ]
+    long_req = load_gen.TraceRequest(2, rng.integers(
+        1, cfg.vocab_size, size=192).astype(np.int32), 8)
+    srv = BatchedSpecServer(
+        cfg, params, max_batch=MAX_BATCH, max_len=256, draft_k=DRAFT_K,
+        draft_spec=layer_sparsity(cfg, 0.5), mode="chain_fused",
+        adaptive=False, paged=True, page_size=64, prefill_chunk=16,
+    )
+    t0 = time.perf_counter()
+    rep = load_gen.run_trace(srv, shorts + [long_req], max_batch=MAX_BATCH)
+    rep["us_per_round"] = (
+        (time.perf_counter() - t0) * 1e6 / max(rep["rounds"], 1)
+    )
+    # tokens routed to OTHER requests while the long prompt was still
+    # prefilling: every token before its first token is someone else's
+    long_first = rep["ttft_rounds_max"]    # the 192-token prompt dominates
+    overlap = int(sum(rep["routed_per_round"][2:2 + int(long_first)]))
+    print(csv_line(
+        "serve/chunked_prefill_overlap", rep["us_per_round"],
+        f"overlap_tokens={overlap};long_ttft_rounds={long_first};"
+        + load_gen.summarize(rep),
+    ))
+    out["chunked_overlap_tokens"] = overlap
+    out["loadgen_chunked_prefill"] = {
+        "tokens_per_step": rep["tokens_per_round"],
+        "us_per_round": rep["us_per_round"],
+    }
+    out["chunked_run"] = {
+        k: v for k, v in rep.items() if k not in ("finished", "token_streams")
+    }
+    return parity, overlap
 
 
 _SHARD_SCRIPT = """

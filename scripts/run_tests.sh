@@ -39,4 +39,15 @@ if [ "${1:-}" = "sampled" ]; then
          tests/test_sampled_serving.py tests/test_dispatch_contracts.py "$@"
 fi
 
+# "paged" first arg expands to the paged-serving modules (the CI
+# paged-serving leg runs this on both jax versions): kernel-level page
+# gather + invalid-position masking contracts, paged-vs-dense token
+# identity in every mode (greedy + sampled, single-device + mesh),
+# chunked-prefill prefix parity / non-blocking admission, and the
+# dispatch contracts on the paged executables.
+if [ "${1:-}" = "paged" ]; then
+  shift
+  set -- tests/test_kernels.py tests/test_paged_serving.py "$@"
+fi
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -913,6 +913,95 @@ def _commit_ctx(ctx, n, acc_tok, n_acc):
     return ctx.at[jnp.arange(B)[:, None], dest].set(acc_tok, mode="drop")
 
 
+def prefill_chunk_stage(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    state: dict,
+    *,
+    chunk: int,
+    sampled: bool = False,
+) -> Tuple[dict, dict]:
+    """Continuous chunked prefill, fused into the serving round.
+
+    Consumes up to ``chunk`` prompt tokens for every slot whose prompt is
+    still being prefilled (``state["pf_done"] < state["pf_len"]``; the
+    prompt itself sits in the carried ``ctx`` buffer) through ONE
+    ``decode_step`` + ``commit_cache`` — the staged rows of a chunk are
+    committed unconditionally (the prompt needs no verification), advancing
+    ``cache["pos"]`` and ``pf_done`` together. The whole stage is
+    ``lax.cond``-gated on any slot being mid-prefill, so steady-state
+    rounds (nobody prefilling) skip its compute entirely while keeping one
+    executable.
+
+    On the round a slot finishes its prompt, its first generated token is
+    produced HERE — greedy argmax of the last prompt position's logits, or
+    (``sampled=True``) the same split + uniform + warp + inverse-CDF
+    sequence the dense admission path runs on host — and stored as the
+    slot's ``pending``, so the slot joins the decode round in the SAME
+    dispatch and its token stream matches the dense path's from the first
+    token. Slots still mid-prefill get their ``pending`` set to
+    ``ctx[pos]`` (the prompt token already there), which turns the round
+    prologue's pending scatter into a value no-op — the prompt is never
+    corrupted, and the serving wrapper masks those slots out of ``live``
+    for the decode half.
+
+    Restrictions (enforced at server build time): attention-only stacks
+    (SSM states would need per-slot zeroing at enqueue), non-ring paged
+    caches, ``round_mode="single"``.
+    """
+    pf_done, pf_len = state["pf_done"], state["pf_len"]
+    active = pf_done < pf_len
+
+    def _run(ops):
+        cache, state = ops
+        state = dict(state)
+        ctx = state["ctx"]
+        B, L = ctx.shape
+        pf_done, pf_len = state["pf_done"], state["pf_len"]
+        n_new = jnp.where(
+            active, jnp.minimum(pf_len - pf_done, chunk), 0
+        ).astype(jnp.int32)
+        offs = pf_done[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None]
+        toks = jnp.take_along_axis(ctx, jnp.clip(offs, 0, L - 1), axis=1)
+        logits, staged = M.decode_step(cfg, params, cache, toks, q_pos=offs)
+        path = jnp.broadcast_to(
+            jnp.arange(chunk, dtype=jnp.int32)[None], (B, chunk)
+        )
+        new_cache = M.commit_cache(cfg, cache, staged, path, n_new)
+        done_now = active & (pf_done + n_new >= pf_len)
+        last_i = jnp.clip(n_new - 1, 0, chunk - 1)
+        last = jnp.take_along_axis(logits, last_i[:, None, None], axis=1)[:, 0]
+        if sampled:
+            # device twin of the host admission draw (add_request): split
+            # the admission-bound key, one uniform from the sub-key, warp,
+            # inverse-CDF — and carry the advanced key only on completion
+            ks = jax.vmap(lambda k: jax.random.split(k, 2))(state["key"])
+            u0 = jax.vmap(lambda k: jax.random.uniform(k, ()))(ks[:, 1])
+            q = verify_lib.sampling_probs(
+                last, state["temp"], state["topk"], state["topp"]
+            )
+            first = verify_lib._inv_cdf(q, u0)
+            state["key"] = jnp.where(
+                done_now[:, None], ks[:, 0], state["key"]
+            )
+        else:
+            first = jnp.argmax(last, -1).astype(jnp.int32)
+        pend = jnp.where(done_now, first, state["pending"])
+        new_done = pf_done + n_new
+        still = new_done < pf_len
+        safe = jnp.take_along_axis(
+            ctx, jnp.clip(new_cache["pos"], 0, L - 1)[:, None], axis=1
+        )[:, 0]
+        state["pending"] = jnp.where(still, safe, pend).astype(jnp.int32)
+        state["pf_done"] = new_done
+        return new_cache, state
+
+    return jax.lax.cond(
+        jnp.any(active), _run, lambda ops: ops, (cache, dict(state))
+    )
+
+
 def chain_round(
     cfg: ModelConfig,
     params: dict,
@@ -995,7 +1084,14 @@ def chain_round(
             jnp.any(limit > have), _draft, lambda ops: ops, (chains, have)
         )
     if sampled:
-        state["key"], u = verify_lib.round_uniforms(state["key"], draft_k + 1)
+        # live-gated key advance: a dead slot's stream is dead, and a
+        # chunk-prefilling slot (serving's prefill_chunk wrapper masks it
+        # out of `live`) must reach its first decode round with the exact
+        # key admission bound — the same key the dense admission path
+        # leaves it with. Live slots' uniforms are unchanged (per-slot
+        # threefry streams are independent).
+        new_key, u = verify_lib.round_uniforms(state["key"], draft_k + 1)
+        state["key"] = jnp.where(live[:, None], new_key, state["key"])
         new_cache, n_chain, new_pending = verify_accept_commit_sampled(
             cfg, params, cache, pending, chains, have, live,
             state["temp"], state["topk"], state["topp"], u,
@@ -1107,7 +1203,10 @@ def tree_round(
             )
         )
     if sampled:
-        state["key"], u = verify_lib.round_uniforms(state["key"], bucket)
+        # live-gated key advance — see chain_round: frozen keys for dead
+        # and chunk-prefilling slots, identical uniforms for live ones
+        new_key, u = verify_lib.round_uniforms(state["key"], bucket)
+        state["key"] = jnp.where(live[:, None], new_key, state["key"])
         new_cache, path, n_acc, bonus = tree_verify_accept_commit_sampled(
             cfg, params, cache, tokens, parents, depth, mask, count, live,
             state["temp"], state["topk"], state["topp"], u,

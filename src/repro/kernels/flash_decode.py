@@ -77,6 +77,97 @@ def _kernel(
         l_ref[0, 0] = l_scr[...][:, 0]
 
 
+def _paged_kernel(
+    tbl_ref,                                           # scalar prefetch (B, n_pp)
+    q_ref, k_ref, v_ref, kvpos_ref, qpos_ref,          # inputs
+    acc_ref, m_ref, l_ref,                             # outputs
+    m_scr, l_scr, o_scr,                               # VMEM scratch
+    *, kind: str, window: int, sink: int, scale: float, nk: int,
+):
+    # identical math to _kernel — only the k/v BlockSpec index_maps differ
+    # (they dereference the prefetched page table), so the masking contract
+    # is shared verbatim
+    del tbl_ref
+    _kernel(
+        q_ref, k_ref, v_ref, kvpos_ref, qpos_ref,
+        acc_ref, m_ref, l_ref, m_scr, l_scr, o_scr,
+        kind=kind, window=window, sink=sink, scale=scale, nk=nk,
+    )
+
+
+def flash_decode_paged_partial(
+    q: jax.Array,           # (B, KV, R, hd)
+    k_pages: jax.Array,     # (NP, KV, P, hd) shared page pool
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, n_pp) int32, -1 = unallocated
+    kv_pos: jax.Array,      # (B, n_pp * P) int32, -1 = invalid
+    q_pos: jax.Array,       # (B, R) int32
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    sink: int = 0,
+    interpret: bool = True,
+    scale: float | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Block-paged flash-decode partials: the page table rides as a SCALAR
+    PREFETCH operand and the k/v BlockSpec index_maps dereference it, so the
+    j-th KV chunk streamed HBM->VMEM is pool page ``page_table[b, j]`` — the
+    gather costs no extra pass. Unallocated entries (-1) are clamped to page
+    0; whatever garbage that block holds is killed by the caller's
+    ``kv_pos = -1`` rows, exactly the invalid-slot contract the dense kernel
+    already enforces (partially-filled tail pages work the same way).
+    Returns (acc, m, l) like ``flash_decode_partial``."""
+    B, KV, R, hd = q.shape
+    NP, _, P, _ = k_pages.shape
+    n_pp = page_table.shape[1]
+    assert kv_pos.shape[1] == n_pp * P, (
+        f"kv_pos covers {kv_pos.shape[1]} slots, table spans {n_pp * P}"
+    )
+    nk = n_pp
+    scale = hd ** -0.5 if scale is None else scale
+
+    kernel = functools.partial(
+        _paged_kernel, kind=kind, window=window, sink=sink, scale=scale, nk=nk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g, j, tbl: (b, g, 0, 0)),
+            pl.BlockSpec(
+                (1, 1, P, hd),
+                lambda b, g, j, tbl: (jnp.maximum(tbl[b, j], 0), g, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, P, hd),
+                lambda b, g, j, tbl: (jnp.maximum(tbl[b, j], 0), g, 0, 0),
+            ),
+            pl.BlockSpec((1, P), lambda b, g, j, tbl: (b, j)),
+            pl.BlockSpec((1, R), lambda b, g, j, tbl: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, R, hd), lambda b, g, j, tbl: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g, j, tbl: (b, g, 0)),
+            pl.BlockSpec((1, 1, R), lambda b, g, j, tbl: (b, g, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, R, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, R), jnp.float32),
+        ],
+        interpret=interpret,
+    )(page_table, q, k_pages, v_pages, kv_pos, q_pos)
+
+
 def flash_decode_partial(
     q: jax.Array,        # (B, KV, R, hd)
     k: jax.Array,        # (B, KV, S, hd)

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_decode import flash_decode_partial
+from repro.kernels.flash_decode import flash_decode_paged_partial, flash_decode_partial
 from repro.kernels.int8_matmul import int8_matmul, quantize_cols, quantize_rows
 from repro.kernels.tree_attention import tree_attention_partial
 
@@ -87,6 +87,64 @@ def verify_attention(
         (l_c[..., None] * cc + l_d[..., None] * cd), 1e-30
     )
     out = out[..., :hd0]                                  # drop hd padding
+    out = out.reshape(B, KV, rep, T, hd0).transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd0)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "window", "sink", "interpret"),
+)
+def paged_verify_attention(
+    q: jax.Array,           # (B, T, H, hd) staged queries
+    k_pages: jax.Array,     # (NP, P, KV, hd) shared pool, model layout
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, n_pp) int32 (-1 unallocated)
+    kv_pos: jax.Array,      # (B, n_pp * P) int32 (-1 invalid)
+    q_pos: jax.Array,       # (B, T)
+    k_new: jax.Array,       # (B, T, KV, hd)
+    v_new: jax.Array,
+    tree_mask: jax.Array,   # (B, T, T) bool (incl. positional validity)
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    sink: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Block-paged twin of ``verify_attention``: cache partials come from
+    ``flash_decode_paged_partial`` (page table scalar-prefetched into the
+    kernel's index_maps), the staged-tree partials and the logsumexp merge
+    are byte-for-byte the dense path's — paging changes where committed KV
+    lives, never how the two softmax halves combine."""
+    B, T, H, hd0 = q.shape
+    KV = k_pages.shape[2]
+    rep = H // KV
+
+    qr = q.reshape(B, T, KV, rep, hd0).transpose(0, 2, 3, 1, 4).reshape(B, KV, rep * T, hd0)
+    qr = _pad_to(qr, 3, 128)
+    kp = _pad_to(k_pages.transpose(0, 2, 1, 3), 3, 128)   # (NP, KV, P, hd)
+    vp = _pad_to(v_pages.transpose(0, 2, 1, 3), 3, 128)
+    kn = _pad_to(k_new.transpose(0, 2, 1, 3), 3, 128)
+    vn = _pad_to(v_new.transpose(0, 2, 1, 3), 3, 128)
+
+    qp_rows = jnp.tile(q_pos, (1, rep))                   # (B, rep*T)
+
+    scale = hd0 ** -0.5
+    acc_c, m_c, l_c = flash_decode_paged_partial(
+        qr, kp, vp, page_table, kv_pos, qp_rows,
+        kind=kind, window=window, sink=sink, interpret=interpret, scale=scale,
+    )
+    acc_d, m_d, l_d = tree_attention_partial(
+        qr, kn, vn, tree_mask, interpret=interpret, scale=scale
+    )
+
+    m = jnp.maximum(m_c, m_d)
+    cc = jnp.exp(m_c - m)[..., None]
+    cd = jnp.exp(m_d - m)[..., None]
+    out = (acc_c * cc + acc_d * cd) / jnp.maximum(
+        (l_c[..., None] * cc + l_d[..., None] * cd), 1e-30
+    )
+    out = out[..., :hd0]
     out = out.reshape(B, KV, rep, T, hd0).transpose(0, 3, 1, 2, 4).reshape(B, T, H, hd0)
     return out
 

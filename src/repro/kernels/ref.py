@@ -49,6 +49,48 @@ def ref_verify_attention(
     return jnp.einsum("bgrs,bgsh->bgrh", p, vcat)
 
 
+def ref_paged_gather(
+    pages: jax.Array,       # (NP, KV, P, hd) shared pool
+    page_table: jax.Array,  # (B, n_pp) int32, -1 = unallocated
+) -> jax.Array:
+    """Materialize the dense per-slot view of a block-paged pool.
+
+    Unallocated entries (-1) are clamped to page 0 — the garbage they pull
+    in must be masked by the caller's ``kv_pos = -1`` rows, mirroring the
+    kernel's index_map clamp exactly. Returns (B, KV, n_pp * P, hd)."""
+    NP, KV, P, hd = pages.shape
+    B, n_pp = page_table.shape
+    safe = jnp.clip(page_table, 0, NP - 1)
+    gathered = jnp.take(pages, safe, axis=0)              # (B, n_pp, KV, P, hd)
+    return gathered.transpose(0, 2, 1, 3, 4).reshape(B, KV, n_pp * P, hd)
+
+
+def ref_paged_verify_attention(
+    q: jax.Array,           # (B, KV, R, hd)
+    k_pages: jax.Array,     # (NP, KV, P, hd)
+    v_pages: jax.Array,
+    page_table: jax.Array,  # (B, n_pp)
+    kv_pos: jax.Array,      # (B, n_pp * P)
+    q_pos: jax.Array,       # (B, R)
+    k_new: jax.Array,       # (B, KV, T, hd)
+    v_new: jax.Array,
+    tree_mask: jax.Array,   # (B, T, T)
+    *,
+    kind: str = "causal",
+    window: int = 0,
+    sink: int = 0,
+) -> jax.Array:
+    """Paged oracle: gather pool pages to the dense view, then the dense
+    oracle — the page table only changes *where* KV lives, never the math."""
+    return ref_verify_attention(
+        q,
+        ref_paged_gather(k_pages, page_table),
+        ref_paged_gather(v_pages, page_table),
+        kv_pos, q_pos, k_new, v_new, tree_mask,
+        kind=kind, window=window, sink=sink,
+    )
+
+
 def ref_int8_matmul(
     x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array, w_scale: jax.Array
 ) -> jax.Array:

@@ -85,6 +85,12 @@ def run_batched(cfg, params, args) -> None:
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=args.seed,
         )
+    if args.paged or args.prefill_chunk:
+        # block-paged KV cache (+ optional in-round chunked prefill) —
+        # token-identical to the dense path; see docs/paging.md
+        srv_kw.update(paged=True, page_size=args.page_size)
+        if args.prefill_chunk:
+            srv_kw["prefill_chunk"] = args.prefill_chunk
     srv = BatchedSpecServer(
         cfg, params, max_batch=args.batch, max_len=1024,
         mode=args.mode, mesh=mesh, **srv_kw,
@@ -148,6 +154,15 @@ def main():
     ap.add_argument("--seed", type=int, default=None,
                     help="base PRNG seed for sampled serving (per-request "
                          "streams derive from it and the admission order)")
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache (batched path; lossless — "
+                         "see docs/paging.md)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: non-blocking admission — prompts prefill "
+                         "inside the fused rounds, this many tokens per "
+                         "round (implies --paged; single-round modes only)")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus /metrics on this port (0 = "
                          "ephemeral; batched path)")

@@ -171,11 +171,19 @@ def seq_shard_count(cfg: ModelConfig, mesh, *, shard_seq: bool = False) -> int:
 def cache_specs(
     cfg: ModelConfig, mesh, *, shard_seq: bool = False,
     ring_window: bool = False, global_batch: int | None = None,
+    paged: bool = False,
 ) -> dict:
     """Cache pytree specs. shard_seq=True -> context parallelism for batch=1
     long-context decode. global_batch (when given) gates the batch axis on
     even divisibility — serving caches with B below the data-way count stay
-    replicated on batch instead of carrying a non-dividing spec."""
+    replicated on batch instead of carrying a non-dividing spec.
+
+    ``paged=True`` matches ``models.model.init_cache(paged=True)``: the
+    attention units hold one SHARED page pool ``(repeats, num_pages,
+    page_size, KV, hd)`` — no per-slot batch dim, so the pool shards only
+    on its KV-head dim (tensor parallel) and replicates across the data
+    axes; the per-slot ``page_table`` is leading-batch like the round
+    state. See docs/paging.md."""
     n = _axis_size(mesh, "model")
     pol = attention_policy(cfg, n)
     kh = "model" if pol == "kv" else None
@@ -190,6 +198,14 @@ def cache_specs(
         unit = []
         for spec in seg.unit:
             if spec.block is BlockKind.ATTENTION:
+                if paged:
+                    unit.append(
+                        {
+                            "k_pages": P(None, None, None, kh, None),
+                            "v_pages": P(None, None, None, kh, None),
+                        }
+                    )
+                    continue
                 ring = ring_window and spec.attn is AttentionKind.SLIDING
                 unit.append(
                     {
@@ -208,7 +224,10 @@ def cache_specs(
                     }
                 )
         segs.append(unit)
-    return {"pos": P(batch_ax), "segments": segs}
+    out = {"pos": P(batch_ax), "segments": segs}
+    if paged:
+        out["page_table"] = P(batch_ax, None)
+    return out
 
 
 def _dp_axes(mesh) -> tuple:
@@ -248,14 +267,18 @@ def batch_specs(cfg: ModelConfig, mesh, *, global_batch: int) -> dict:
     return out
 
 
-def round_state_specs(mesh, *, global_batch: int, sampled: bool = False) -> dict:
+def round_state_specs(
+    mesh, *, global_batch: int, sampled: bool = False, prefill: bool = False,
+) -> dict:
     """Specs for the batched server's carried round state (congruent with
     ``BatchedSpecServer.dstate``): every array is per-slot, so everything
     shards on its leading batch dim along the data axes — the serving
     analogue of ``batch_specs`` (tensor parallelism lives in the params;
     the per-slot EMAs/budgets/ctx are pure data parallelism). ``sampled``
     adds the per-slot sampling state a sampled build carries: the warp
-    params and the (B, 2) threefry key, all leading-batch like the rest."""
+    params and the (B, 2) threefry key, all leading-batch like the rest;
+    ``prefill`` adds the chunked-prefill progress counters a
+    ``prefill_chunk`` build carries (docs/paging.md)."""
     bax = batch_axis(mesh, global_batch)
     out = {
         "pending": P(bax), "live": P(bax), "ctx": P(bax, None),
@@ -267,6 +290,8 @@ def round_state_specs(mesh, *, global_batch: int, sampled: bool = False) -> dict
             "temp": P(bax), "topk": P(bax), "topp": P(bax),
             "key": P(bax, None),
         })
+    if prefill:
+        out.update({"pf_done": P(bax), "pf_len": P(bax)})
     return out
 
 

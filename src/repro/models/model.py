@@ -150,6 +150,11 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
 
 
 # ====================================================================== cache
+def pages_for(max_len: int, page_size: int) -> int:
+    """Pages spanning ``max_len`` tokens (the page-table width per slot)."""
+    return -(-max_len // page_size)
+
+
 def init_cache(
     cfg: ModelConfig,
     batch: int,
@@ -157,16 +162,56 @@ def init_cache(
     *,
     ring_window: bool = False,
     dtype=None,
+    paged: bool = False,
+    page_size: int = 64,
+    num_pages: Optional[int] = None,
 ) -> Cache:
     """Allocate a committed cache. ``ring_window`` stores only `sliding_window`
-    slots (ring buffer) for sliding layers — required for long_500k."""
+    slots (ring buffer) for sliding layers — required for long_500k.
+
+    ``paged=True`` replaces the dense per-slot ``(B, max_len)`` attention
+    buffers with one SHARED page pool per layer — ``k_pages``/``v_pages``
+    of shape ``(repeats, num_pages, page_size, KV, hd)`` — plus a top-level
+    per-slot int32 ``page_table`` of shape ``(batch, max_len // page_size)``
+    mapping logical page index -> pool page (-1 = unallocated). Every read
+    and write addresses through the table (decode gathers a dense per-slot
+    view; write_slot/commit_cache scatter through it), so attention output
+    is BIT-identical to the dense cache: garbage in unallocated pages and
+    beyond ``pos`` is killed by the same ``kv_pos`` masking that already
+    handles partially-filled tails. SSM per-slot states are O(1) and stay
+    dense. ``num_pages`` defaults to a full allocation (batch * pages per
+    slot); callers that size requests can shrink it. Rings page nothing:
+    ``ring_window`` + ``paged`` is rejected."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     hd = cfg.resolved_head_dim()
+    if paged:
+        if ring_window:
+            raise ValueError("paged caches do not support ring_window")
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of page_size={page_size}"
+            )
+        if num_pages is None:
+            num_pages = batch * pages_for(max_len, page_size)
     segs = []
     for seg in layout(cfg):
         unit_caches = []
         for spec in seg.unit:
             if spec.block is BlockKind.ATTENTION:
+                if paged:
+                    unit_caches.append(
+                        {
+                            "k_pages": jnp.zeros(
+                                (seg.repeats, num_pages, page_size, cfg.num_kv_heads, hd),
+                                dtype,
+                            ),
+                            "v_pages": jnp.zeros(
+                                (seg.repeats, num_pages, page_size, cfg.num_kv_heads, hd),
+                                dtype,
+                            ),
+                        }
+                    )
+                    continue
                 S_c = (
                     min(cfg.sliding_window, max_len)
                     if (ring_window and spec.attn is AttentionKind.SLIDING)
@@ -193,7 +238,12 @@ def init_cache(
                     }
                 )
         segs.append(unit_caches)
-    return {"pos": jnp.zeros((batch,), jnp.int32), "segments": segs}
+    out: Cache = {"pos": jnp.zeros((batch,), jnp.int32), "segments": segs}
+    if paged:
+        out["page_table"] = jnp.full(
+            (batch, pages_for(max_len, page_size)), -1, jnp.int32
+        )
+    return out
 
 
 # ================================================================ layer bodies
@@ -264,13 +314,35 @@ def _attn_layer(
         )
         staged = {"k": k, "v": v} if mode == "prefill" else None
     else:
-        S_c = layer_cache["k"].shape[2]
-        # ring iff the allocation is capped at the window (see init_cache)
-        ring = spec.attn is AttentionKind.SLIDING and S_c <= window
+        if "k_pages" in layer_cache:
+            # block-paged cache: gather the slot's pages into a dense
+            # (B, n_pp * P, KV, hd) view and run the unchanged decode path.
+            # Unallocated pages (table -1, clamped to page 0) and rows past
+            # ``pos`` hold garbage VALUES only — the kv_pos rule
+            # (slot < pos) masks them to NEG_INF before the softmax, so the
+            # output is bit-identical to the dense cache.
+            tbl = layer_cache["_table"]                  # (B, n_pp)
+            pool_k, pool_v = layer_cache["k_pages"], layer_cache["v_pages"]
+            NP, P_sz = pool_k.shape[0], pool_k.shape[1]
+            safe = jnp.clip(tbl, 0, NP - 1)
+            Bt, n_pp = tbl.shape
+            k_view = jnp.take(pool_k, safe, axis=0).reshape(
+                Bt, n_pp * P_sz, pool_k.shape[2], pool_k.shape[3]
+            )
+            v_view = jnp.take(pool_v, safe, axis=0).reshape(
+                Bt, n_pp * P_sz, pool_v.shape[2], pool_v.shape[3]
+            )
+            cache_kv = (k_view, v_view)
+            ring = False
+        else:
+            S_c = layer_cache["k"].shape[2]
+            # ring iff the allocation is capped at the window (see init_cache)
+            ring = spec.attn is AttentionKind.SLIDING and S_c <= window
+            cache_kv = (layer_cache["k"], layer_cache["v"])
         o = attn_lib.decode_attention(
             q,
-            layer_cache["k"],
-            layer_cache["v"],
+            cache_kv[0],
+            cache_kv[1],
             layer_cache["_pos"],
             k,
             v,
@@ -371,6 +443,9 @@ def _run_stack(
         gates = jnp.ones((cfg.num_layers,), h.dtype)
     gates = gates.astype(h.dtype)
     cache_pos = cache["pos"] if cache is not None else jnp.zeros((), jnp.int32)
+    # paged caches: the per-slot page table is closed over (like cache_pos),
+    # NOT scanned — every layer of a segment shares the one (B, n_pp) table
+    page_table = cache.get("page_table") if cache is not None else None
 
     staged_segments = []
     aux = jnp.zeros((), jnp.float32)
@@ -395,6 +470,8 @@ def _run_stack(
                 if c_u is not None:
                     lc = dict(c_u[u])
                     lc["_pos"] = cache_pos
+                    if page_table is not None:
+                        lc["_table"] = page_table
                 gate = g_u[u]
                 if spec.block is BlockKind.ATTENTION:
                     delta, staged = _attn_layer(
@@ -519,6 +596,13 @@ def prefill(
 
 
 def _write_prefill(cfg: ModelConfig, cache: Cache, staged, S: int) -> Cache:
+    if "page_table" in cache:
+        raise NotImplementedError(
+            "prefill writes a dense cache; paged serving prefills a dense "
+            "bucketed B=1 cache and scatters it with write_slot, or chunks "
+            "the prompt through decode_step + commit_cache "
+            "(engine.prefill_chunk_stage)"
+        )
     segs = layout(cfg)
     new_segments = []
     for si, seg in enumerate(segs):
@@ -645,14 +729,77 @@ def write_slot(cfg: ModelConfig, cache: Cache, c1: Cache, slot) -> Cache:
     be traced, so one executable serves every slot). Jitted with the batched
     cache donated, admission updates the largest live buffer in place
     instead of round-tripping a full copy through the host.
+
+    ``c1`` may be allocated at a padded BUCKET shorter than the batched
+    cache's ``max_len`` (admission sizes it to the prompt, not the worst
+    case): its rows land at the front of the slot, and rows past
+    ``c1["pos"]`` are never read (kv_pos masking), so the leftover tail
+    from the slot's previous occupant is as invisible as the zeros a
+    full-length prefill cache used to write there. When the batched cache
+    is PAGED, the same rows scatter through ``page_table[slot]`` instead —
+    the pages must have been allocated (table row set) before the call.
     """
-    new_segments = jax.tree.map(
-        lambda dst, src: dst.at[:, slot].set(src[:, 0].astype(dst.dtype)),
-        cache["segments"],
-        c1["segments"],
-    )
-    pos = cache["pos"].at[slot].set(c1["pos"][0])
-    return {"pos": pos, "segments": new_segments}
+    segs = layout(cfg)
+    paged = "page_table" in cache
+    new_segments = []
+    for si, seg in enumerate(segs):
+        new_unit = []
+        for u, spec in enumerate(seg.unit):
+            dst = cache["segments"][si][u]
+            src = c1["segments"][si][u]
+            if spec.block is BlockKind.ATTENTION and paged:
+                table = cache["page_table"]
+                pool = dst["k_pages"]
+                NP, P_sz = pool.shape[1], pool.shape[2]
+                tbl_row = table[slot]                       # (n_pp,)
+                rows = jnp.arange(src["k"].shape[2], dtype=jnp.int32)
+                page = jnp.take(
+                    tbl_row, jnp.clip(rows // P_sz, 0, tbl_row.shape[0] - 1)
+                )
+                # unallocated page -> OOB sentinel, dropped by the scatter;
+                # offset by the logical page so (page, off) pairs stay
+                # unique (duplicates under unique_indices=True are UB)
+                page = jnp.where(page >= 0, page, NP + rows // P_sz)
+                off = rows % P_sz
+                ent = {}
+                for name in ("k", "v"):
+                    s = src[name][:, 0].astype(dst[name + "_pages"].dtype)
+                    ent[name + "_pages"] = dst[name + "_pages"].at[
+                        :, page, off
+                    ].set(s, mode="drop", unique_indices=True)
+                new_unit.append(ent)
+            elif spec.block is BlockKind.ATTENTION:
+                S_c = dst["k"].shape[2]
+                S_src = src["k"].shape[2]
+                if S_src == S_c:
+                    new_unit.append(jax.tree.map(
+                        lambda d, s: d.at[:, slot].set(s[:, 0].astype(d.dtype)),
+                        dst, src,
+                    ))
+                elif S_src < S_c:
+                    new_unit.append({
+                        name: jax.lax.dynamic_update_slice(
+                            dst[name],
+                            src[name].astype(dst[name].dtype),
+                            (0, slot, 0, 0, 0),
+                        )
+                        for name in ("k", "v")
+                    })
+                else:
+                    raise NotImplementedError(
+                        f"prefill cache seq {S_src} exceeds batched cache "
+                        f"seq {S_c} (ring slots cannot take longer buckets)"
+                    )
+            else:
+                new_unit.append(jax.tree.map(
+                    lambda d, s: d.at[:, slot].set(s[:, 0].astype(d.dtype)),
+                    dst, src,
+                ))
+        new_segments.append(new_unit)
+    out = dict(cache)
+    out["pos"] = cache["pos"].at[slot].set(c1["pos"][0])
+    out["segments"] = new_segments
+    return out
 
 
 def commit_cache(
@@ -683,7 +830,42 @@ def commit_cache(
         for u, spec in enumerate(seg.unit):
             c = cache["segments"][si][u]
             st = staged[si][u]
-            if spec.block is BlockKind.ATTENTION:
+            if spec.block is BlockKind.ATTENTION and "k_pages" in c:
+                # paged commit: same gather of the accepted path, but the
+                # destination row (pos + step) routes through the page
+                # table — rejected rows AND rows whose page is unallocated
+                # get the OOB sentinel page and are dropped in place
+                NP, P_sz = c["k_pages"].shape[1], c["k_pages"].shape[2]
+                table = cache["page_table"]                      # (B, n_pp)
+                n_pp = table.shape[1]
+                gidx = path_idx[None, :, :, None, None]          # (1,B,T,1,1)
+                k = jnp.take_along_axis(
+                    st["k"].astype(c["k_pages"].dtype), gidx, axis=2
+                )
+                v = jnp.take_along_axis(
+                    st["v"].astype(c["v_pages"].dtype), gidx, axis=2
+                )
+                dest = base[:, None] + step[None]                # (B, T)
+                pg_log = dest // P_sz
+                page = jnp.take_along_axis(
+                    table, jnp.clip(pg_log, 0, n_pp - 1), axis=1
+                )
+                ok = live & (pg_log < n_pp) & (page >= 0)
+                # dropped rows need an OOB page that is UNIQUE per (b, t):
+                # a shared sentinel would repeat (page, off) pairs across
+                # slots, and duplicate indices under unique_indices=True
+                # are undefined behavior (nondeterministic on CPU)
+                oob = NP + b_idx * T + step[None]                # (B, T)
+                page = jnp.where(ok, page, oob)
+                off = dest % P_sz
+                ck = c["k_pages"].at[:, page, off].set(
+                    k, mode="drop", unique_indices=True
+                )
+                cv = c["v_pages"].at[:, page, off].set(
+                    v, mode="drop", unique_indices=True
+                )
+                new_unit.append({"k_pages": ck, "v_pages": cv})
+            elif spec.block is BlockKind.ATTENTION:
                 S_c = c["k"].shape[2]
                 gidx = path_idx[None, :, :, None, None]          # (1,B,T,1,1)
                 # cast BEFORE the gather/scatter chain: the staged tensors
@@ -698,8 +880,11 @@ def commit_cache(
                 # copy-free in-place commit: rejected slots get an
                 # OUT-OF-BOUNDS dest — jax scatter drops OOB updates
                 # (mode='drop'), so no old-row gather, no trash row, and
-                # the scatter can alias the donated cache in place.
-                dest = jnp.where(live, dest, jnp.int32(S_c))
+                # the scatter can alias the donated cache in place. The
+                # OOB dest is offset per step: repeated indices under
+                # unique_indices=True are undefined behavior even when
+                # every duplicate is dropped.
+                dest = jnp.where(live, dest, S_c + step[None])
                 ck = c["k"].at[:, b_idx, dest].set(
                     k, mode="drop", unique_indices=True
                 )
@@ -720,4 +905,7 @@ def commit_cache(
 
                 new_unit.append(jax.tree.map(commit_state, st, c))
         new_segments.append(new_unit)
-    return {"pos": base + n_acc, "segments": new_segments}
+    out = dict(cache)                 # paged caches carry their page_table
+    out["pos"] = base + n_acc
+    out["segments"] = new_segments
+    return out

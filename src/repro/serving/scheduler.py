@@ -224,12 +224,19 @@ class ServeLoop:
         with maybe_span(self.trace, "admit"):
             for slot in self.scheduler.admit():
                 req = self.scheduler.active[slot]
+                # the request's token budget rides admission so paged
+                # servers can size the slot's KV page allocation to
+                # prompt + budget instead of a full max_len reservation
                 if req.sampling is not None:
                     self.server.add_request(
-                        slot, req.prompt, sampling=req.sampling
+                        slot, req.prompt, sampling=req.sampling,
+                        max_new_tokens=req.max_new_tokens,
                     )
                 else:
-                    self.server.add_request(slot, req.prompt)
+                    self.server.add_request(
+                        slot, req.prompt,
+                        max_new_tokens=req.max_new_tokens,
+                    )
                 self._slot_req[slot] = req
                 self._req_slot[req.request_id] = slot
         # the "dispatch" span times the HOST side of a round (pipelined

@@ -165,6 +165,7 @@ from repro.core.engine import (
     cascade_rescore_verify,
     chain_draft_scan,
     chain_round,
+    prefill_chunk_stage,
     tree_draft_scan,
     tree_round,
     tree_verify_accept_commit as _tree_verify_accept_commit,
@@ -188,6 +189,17 @@ from repro.serving.sampler import SamplingParams, warp_probs
 
 PROPOSAL_MODES = ("chain_fused", "legacy", "tree_fused", "cascade_fused")
 ROUND_MODES = ("auto", "single", "split")
+
+
+def _prefill_bucket(n: int) -> int:
+    """Padded admission-prefill length: next power of two >= n (floor 16).
+
+    Bounds jit specializations of the B=1 prefill to O(log max_len) shapes
+    while cutting its HBM and FLOPs to ~the prompt's size (satellite S1)."""
+    b = 16
+    while b < n:
+        b *= 2
+    return b
 
 
 class BatchedSpecServer:
@@ -219,10 +231,30 @@ class BatchedSpecServer:
         telemetry: bool = True,        # device-carried round telemetry buffer
         metrics: Optional[TM.MetricsRegistry] = None,   # shared host registry
         sampling: Optional[SamplingParams] = None,  # None -> greedy build
+        paged: bool = False,           # block-paged KV cache (docs/paging.md)
+        page_size: int = 64,           # tokens per KV page
+        num_pages: Optional[int] = None,    # pool size (default: full per-slot)
+        prefill_chunk: int = 0,        # >0: in-round chunked prefill (paged only)
     ):
         self.cfg, self.params = cfg, params
         self.B, self.max_len, self.k = max_batch, max_len, draft_k
         self.draft_spec = draft_spec
+        # ---- block-paged KV cache + chunked prefill (docs/paging.md):
+        # paged=True swaps the dense per-slot (B, max_len) attention buffers
+        # for a shared page pool addressed through per-slot tables — BIT-
+        # identical reads, so every mode below runs unchanged on it.
+        # prefill_chunk>0 additionally makes admission enqueue-only: the
+        # fused round dispatch itself consumes up to `prefill_chunk` prompt
+        # tokens per slot per round (engine.prefill_chunk_stage), so a long
+        # prompt never stalls the pipelined host loop.
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.prefill_chunk = int(prefill_chunk or 0)
+        if self.prefill_chunk and not self.paged:
+            raise ValueError(
+                "prefill_chunk requires paged=True: chunked prompts commit "
+                "through the page table, not a dense per-slot block"
+            )
         # ---- sampled serving (module docstring): server-level defaults for
         # the per-slot warp params; per-request overrides ride admission.
         # A greedy build (None) compiles byte-identical executables to a
@@ -258,8 +290,10 @@ class BatchedSpecServer:
 
             self._param_sharding = ns_tree(SH.param_specs(cfg, mesh))
             self._cache_sharding = ns_tree(
-                SH.cache_specs(cfg, mesh, global_batch=max_batch)
+                SH.cache_specs(cfg, mesh, global_batch=max_batch, paged=paged)
             )
+            # the B=1 admission prefill cache is ALWAYS dense (write_slot
+            # scatters it through the page table on paged builds)
             self._c1_sharding = ns_tree(
                 SH.cache_specs(cfg, mesh, global_batch=1)
             )
@@ -267,6 +301,7 @@ class BatchedSpecServer:
                 SH.round_state_specs(
                     mesh, global_batch=max_batch,
                     sampled=sampling is not None,
+                    prefill=self.prefill_chunk > 0,
                 )
             )
             self._replicated = NamedSharding(mesh, PartitionSpec())
@@ -335,6 +370,18 @@ class BatchedSpecServer:
                     f"{draft_spec.name!r}; mode='cascade_fused' executes "
                     "quantize/attn_override levels through the draft bank"
                 )
+        if self.prefill_chunk:
+            if self.round_mode != "single":
+                raise ValueError(
+                    "prefill_chunk rides the fused round dispatch — build "
+                    "with round_mode='single' (chain_fused / tree_fused)"
+                )
+            if not attention_only:
+                raise ValueError(
+                    "prefill_chunk requires an attention-only text stack: "
+                    "chunked prompt commits address KV through the page "
+                    "table, and SSM per-step states are cumulative"
+                )
         if hierarchy is not None and mode != "cascade_fused":
             raise ValueError("hierarchy=... requires mode='cascade_fused'")
         self.mode = mode
@@ -381,9 +428,26 @@ class BatchedSpecServer:
         self.pld = PromptLookup(max_draft=draft_k)
         self.acceptance = AcceptanceTracker()
         self.costs = CostTracker()
-        self.cache = M.init_cache(cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype))
+        self.cache = M.init_cache(
+            cfg, max_batch, max_len, dtype=jnp.dtype(cfg.dtype),
+            paged=self.paged, page_size=self.page_size, num_pages=num_pages,
+        )
         if mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sharding)
+        # host-side page allocator (paged builds): a plain free list touched
+        # only at admission/retire — both existing sync points — so the
+        # steady-state rounds never see an allocation decision
+        self._pages_per_slot = 0
+        self._free_pages: List[int] = []
+        self._slot_pages: Dict[int, List[int]] = {}
+        if self.paged:
+            self._pages_per_slot = M.pages_for(max_len, self.page_size)
+            pool = (
+                int(num_pages) if num_pages is not None
+                else max_batch * self._pages_per_slot
+            )
+            # pop() from the end -> lowest page indices hand out first
+            self._free_pages = list(range(pool))[::-1]
         self.pending = np.zeros(max_batch, np.int64)
         self.contexts: List[List[int]] = [[] for _ in range(max_batch)]
         self.live = np.zeros(max_batch, bool)
@@ -408,6 +472,14 @@ class BatchedSpecServer:
                 topk=jnp.zeros((max_batch,), jnp.int32),
                 topp=jnp.ones((max_batch,), jnp.float32),
                 key=jnp.zeros((max_batch, 2), jnp.uint32),
+            )
+        if self.prefill_chunk:
+            # chunked-prefill progress per slot: prompt tokens committed so
+            # far vs prompt length; a slot with pf_done < pf_len is masked
+            # dead for the decode half of the round (it is still prefilling)
+            self.dstate.update(
+                pf_done=jnp.zeros((max_batch,), jnp.int32),
+                pf_len=jnp.zeros((max_batch,), jnp.int32),
             )
         if mesh is not None:
             self.dstate = jax.device_put(self.dstate, self._state_sharding)
@@ -456,9 +528,22 @@ class BatchedSpecServer:
         self._prefill1 = jax.jit(
             lambda p, b, c: M.prefill(cfg, p, b, c), donate_argnums=don(2)
         )
-        self._write_slot_fn = jax.jit(
-            functools.partial(M.write_slot, cfg), donate_argnums=don(0)
-        )
+        if self.paged:
+            # paged admission: bind the slot's page-table row, then scatter
+            # the (dense, bucketed) B=1 prefill cache through it — one
+            # jitted dispatch, same as the dense write
+            def _wslot_paged(cache, c1, slot, table_row):
+                cache = dict(
+                    cache,
+                    page_table=cache["page_table"].at[slot].set(table_row),
+                )
+                return M.write_slot(cfg, cache, c1, slot)
+
+            self._write_slot_fn = jax.jit(_wslot_paged, donate_argnums=don(0))
+        else:
+            self._write_slot_fn = jax.jit(
+                functools.partial(M.write_slot, cfg), donate_argnums=don(0)
+            )
 
         def _admit(state, slot, ctx_row, last_logits, *samp):
             prior = jnp.float32(self._prior_alpha)
@@ -486,6 +571,52 @@ class BatchedSpecServer:
             return out
 
         self._admit_fn = jax.jit(_admit, donate_argnums=don(0))
+
+        self._admit_pf_fn = None
+        if self.prefill_chunk:
+            # enqueue-only admission: bind the table row, zero the slot's
+            # position, park the prompt in the ctx row and arm the pf_*
+            # counters — NO prefill dispatch, no B=1 cache, no model FLOPs;
+            # the next fused round starts consuming the prompt in chunks
+            def _admit_pf(cache, state, slot, ctx_row, pf_len, table_row,
+                          *samp):
+                cache = dict(
+                    cache,
+                    page_table=cache["page_table"].at[slot].set(table_row),
+                    pos=cache["pos"].at[slot].set(0),
+                )
+                prior = jnp.float32(self._prior_alpha)
+                W = state["hist"].shape[1]
+                out = dict(
+                    state,
+                    # ctx_row[0] is a "safe" pending: the round prologue
+                    # scatters pending at ctx[pos] for EVERY slot, so for a
+                    # mid-prefill slot it must be a value no-op on the
+                    # prompt (prefill_chunk_stage keeps the invariant)
+                    pending=state["pending"].at[slot].set(ctx_row[0]),
+                    live=state["live"].at[slot].set(True),
+                    ctx=state["ctx"].at[slot].set(ctx_row),
+                    alpha=state["alpha"].at[slot].set(prior),
+                    hist=state["hist"].at[slot].set(
+                        jnp.zeros((W,), jnp.float32)
+                    ),
+                    hist_n=state["hist_n"].at[slot].set(0),
+                    hist_ptr=state["hist_ptr"].at[slot].set(0),
+                    pf_done=state["pf_done"].at[slot].set(0),
+                    pf_len=state["pf_len"].at[slot].set(pf_len),
+                )
+                if samp:
+                    temp, topk, topp, key_row = samp
+                    out["temp"] = state["temp"].at[slot].set(temp)
+                    out["topk"] = state["topk"].at[slot].set(topk)
+                    out["topp"] = state["topp"].at[slot].set(topp)
+                    # the UNSPLIT request key: prefill_chunk_stage splits
+                    # it when the prompt completes, reproducing the dense
+                    # path's host-side admission split bit-for-bit
+                    out["key"] = state["key"].at[slot].set(key_row)
+                return cache, out
+
+            self._admit_pf_fn = jax.jit(_admit_pf, donate_argnums=don(0, 1))
 
         # legacy (unfused) drafting path — kept for A/B benchmarking
         self._decode = jax.jit(
@@ -600,9 +731,34 @@ class BatchedSpecServer:
                         )
                     return cache, state, telem, out
 
-                self._round_fn = jax.jit(fn_t, donate_argnums=don(1, 2, 3))
+                round_core, round_don = fn_t, don(1, 2, 3)
             else:
-                self._round_fn = jax.jit(fn, donate_argnums=don(1, 2))
+                round_core, round_don = fn, don(1, 2)
+            if self.prefill_chunk:
+                # chunked prefill rides the SAME dispatch, outermost: first
+                # consume up to `prefill_chunk` pending prompt tokens per
+                # slot, then run the decode round with mid-prefill slots
+                # masked dead — the speculative machinery skips them and
+                # telemetry credits them no decode rounds. Their real live
+                # bit is restored on the way out.
+                inner_core = round_core
+                chunk = int(self.prefill_chunk)
+                pf_sampled = sampling is not None
+
+                def round_core(p, cache, state, *rest):
+                    cache, state = prefill_chunk_stage(
+                        cfg, p, cache, state, chunk=chunk, sampled=pf_sampled
+                    )
+                    live0 = state["live"]
+                    state = dict(
+                        state,
+                        live=live0 & (state["pf_done"] >= state["pf_len"]),
+                    )
+                    outs = inner_core(p, cache, state, *rest)
+                    state2 = dict(outs[1], live=live0)
+                    return (outs[0], state2) + tuple(outs[2:])
+
+            self._round_fn = jax.jit(round_core, donate_argnums=round_don)
         self._rescore_verify_fns: Dict[int, Callable] = {}
         self._draft_fns: Dict[int, Callable] = {}   # scan steps -> jitted fn
         self._tree_draft_fns: Dict[int, Callable] = {}   # expansions -> jitted fn
@@ -634,8 +790,18 @@ class BatchedSpecServer:
     def add_request(
         self, slot: int, prompt: np.ndarray,
         sampling: Optional[SamplingParams] = None,
+        max_new_tokens: Optional[int] = None,
     ) -> None:
         """Prefill one prompt into a batch slot.
+
+        ``max_new_tokens`` (paged builds) bounds the slot's KV page
+        allocation to prompt + budget + round slack instead of the full
+        ``max_len`` reservation — the HBM win paging exists for; dense
+        builds ignore it. On ``prefill_chunk`` builds admission is
+        ENQUEUE-ONLY: no prefill dispatch runs here at all — the prompt is
+        parked in the slot's context row and the next fused round starts
+        consuming it ``prefill_chunk`` tokens at a time alongside the
+        decoding slots (docs/paging.md).
 
         ``sampling`` overrides the server build's default ``SamplingParams``
         for this request (sampled builds only — a stochastic request on a
@@ -677,14 +843,37 @@ class BatchedSpecServer:
                 len(dropped)
             )
         prompt = np.asarray(prompt, np.int32)
-        c1 = M.init_cache(self.cfg, 1, self.max_len, dtype=jnp.dtype(self.cfg.dtype))
+        table_row = None
+        if self.paged:
+            alloc = (
+                self.max_len if max_new_tokens is None
+                else min(
+                    self.max_len,
+                    len(prompt) + int(max_new_tokens) + self._alloc_slack(),
+                )
+            )
+            table_row = self._alloc_pages(slot, alloc)
+        if self.prefill_chunk:
+            self._admit_chunked(slot, prompt, table_row, sampling)
+            return
+        # admission prefill at the prompt's padded power-of-two bucket, not
+        # max_len — write_slot places the short cache into the batched one
+        # (dense: dynamic_update_slice; paged: table scatter) and positions
+        # past the prompt stay invisible via kv_pos masking
+        bucket = min(_prefill_bucket(len(prompt)), self.max_len)
+        c1 = M.init_cache(self.cfg, 1, bucket, dtype=jnp.dtype(self.cfg.dtype))
         if self.mesh is not None:
             # B=1 prefill cache: batch can't shard, but layout must match the
             # sharded weights it is written from (TP head placement)
             c1 = jax.device_put(c1, self._c1_sharding)
         last, c1 = self._prefill1(self.params, {"tokens": jnp.asarray(prompt[None])}, c1)
         slot_d = jnp.asarray(slot, jnp.int32)
-        self.cache = self._write_slot_fn(self.cache, c1, slot_d)
+        if self.paged:
+            self.cache = self._write_slot_fn(
+                self.cache, c1, slot_d, jnp.asarray(table_row)
+            )
+        else:
+            self.cache = self._write_slot_fn(self.cache, c1, slot_d)
         # device round state: pending/live/context row + a fresh Eq. 4
         # estimator seeded with the draft's cold-start prior
         row = np.zeros(self.max_len, np.int32)
@@ -740,12 +929,96 @@ class BatchedSpecServer:
                 self.bank.direct_key(slot), alpha0=self.bank.direct_prior()
             )
 
+    def _admit_chunked(
+        self, slot: int, prompt: np.ndarray,
+        table_row: np.ndarray, sampling: Optional[SamplingParams],
+    ) -> None:
+        """Enqueue-only admission (``prefill_chunk`` builds): one jitted
+        state/table bind and the host loop moves on — the prompt prefills
+        inside the next fused round dispatches."""
+        row = np.zeros(self.max_len, np.int32)
+        row[: len(prompt)] = prompt
+        samp_args = ()
+        if self.sampling is not None:
+            eff = sampling if sampling is not None else self.sampling
+            if eff.seed is not None:
+                key = jax.random.PRNGKey(eff.seed)
+            else:
+                key = jax.random.fold_in(self._base_key, self._admit_seq)
+            self._admit_seq += 1
+            samp_args = (
+                jnp.asarray(max(eff.temperature, 0.0), jnp.float32),
+                jnp.asarray(eff.top_k, jnp.int32),
+                jnp.asarray(eff.top_p, jnp.float32),
+                key,    # unsplit: the completing round splits it in-dispatch
+            )
+            if not eff.greedy:
+                self.metrics.counter("serve_sampled_requests_total").inc()
+        slot_d = jnp.asarray(slot, jnp.int32)
+        self.cache, self.dstate = self._admit_pf_fn(
+            self.cache, self.dstate, slot_d, jnp.asarray(row),
+            jnp.asarray(len(prompt), jnp.int32), jnp.asarray(table_row),
+            *samp_args,
+        )
+        # host mirrors: pending is unknown until the prompt finishes
+        # prefilling in-round; chunked builds are single-mode only, so the
+        # mirror is purely informational
+        self.pending[slot] = int(prompt[-1])
+        self.contexts[slot] = [int(t) for t in prompt]
+        self.live[slot] = True
+        prior = self.draft_spec.prior_alpha if self.draft_spec else 0.5
+        self.acceptance.reset(self._slot_key(slot), alpha0=prior)
+
+    # -------------------------------------------------- page pool (paged)
+    def _alloc_slack(self) -> int:
+        """Worst-case commit overshoot past ``max_new_tokens``: pipelined
+        rounds in flight when the finish is observed keep committing."""
+        per_round = self.tree_bucket or (self.k + 1)
+        return (self.sync_every + 1) * per_round
+
+    def _alloc_pages(self, slot: int, n_tokens: int) -> np.ndarray:
+        """Reserve pool pages covering ``n_tokens`` for a slot; returns the
+        slot's full table row (-1 padded past the allocation)."""
+        need = min(
+            -(-int(n_tokens) // self.page_size), self._pages_per_slot
+        )
+        self._free_slot_pages(slot)
+        if need > len(self._free_pages):
+            raise RuntimeError(
+                f"KV page pool exhausted: slot {slot} needs {need} pages, "
+                f"{len(self._free_pages)} free — raise num_pages or admit "
+                "fewer/shorter concurrent requests"
+            )
+        pages = [self._free_pages.pop() for _ in range(need)]
+        self._slot_pages[slot] = pages
+        self.metrics.gauge("serve_free_pages").set(len(self._free_pages))
+        row = np.full(self._pages_per_slot, -1, np.int32)
+        row[:need] = pages
+        return row
+
+    def _free_slot_pages(self, slot: int) -> None:
+        pages = self._slot_pages.pop(slot, None)
+        if pages:
+            self._free_pages.extend(pages)
+            self.metrics.gauge("serve_free_pages").set(len(self._free_pages))
+
     def release(self, slot: int) -> None:
         """Mark a slot free (its request finished or was cancelled)."""
         self.live[slot] = False
-        self.dstate = dict(
+        upd = dict(
             self.dstate, live=self.dstate["live"].at[slot].set(False)
         )
+        if self.prefill_chunk:
+            # a request cancelled mid-prefill must stop consuming chunks
+            upd["pf_len"] = self.dstate["pf_len"].at[slot].set(0)
+            upd["pf_done"] = self.dstate["pf_done"].at[slot].set(0)
+        self.dstate = upd
+        if self.paged:
+            # host-side free at an existing sync point; the stale device
+            # table row is harmless (a dead slot never commits — its writes
+            # carry the out-of-pool sentinel page) and the row is re-bound
+            # at the slot's next admission
+            self._free_slot_pages(slot)
 
     def _slot_key(self, slot: int) -> str:
         return f"chain:{slot}"

@@ -76,6 +76,139 @@ def test_verify_attention_empty_cache():
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
 
 
+# ---------------------------------------------------------------------------
+# invalid-position masking property tests (satellite of the paged cache):
+# the page gather relies ENTIRELY on the kv_pos = -1 contract to hide
+# unallocated pages and partially-filled tails — these pin that contract on
+# flash_decode_partial itself against the dense oracle.
+# ---------------------------------------------------------------------------
+from repro.kernels.flash_decode import (       # noqa: E402
+    flash_decode_paged_partial, flash_decode_partial,
+)
+
+
+def _norm(acc, m, l):
+    """Normalize flash partials to a full softmax (no staged half)."""
+    return acc / jnp.maximum(l[..., None], 1e-30)
+
+
+def _dense_oracle(q, k, v, kv_pos, q_pos, *, kind="causal", window=0, sink=0):
+    """Full-softmax reference over the cache only (f32)."""
+    s = jnp.einsum("bgrh,bgsh->bgrs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    qp = q_pos[:, None, :, None]
+    kp = kv_pos[:, None, None, :]
+    valid = (kp >= 0) & (kp <= qp)
+    if kind == "window":
+        valid &= kp > qp - window
+    elif kind == "streaming":
+        valid &= (kp < sink) | (kp > qp - window)
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrs,bgsh->bgrh", p, v.astype(jnp.float32))
+
+
+def _mk_partial(B, KV, R_, hd, S, seed, pos):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, KV, R_, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    kv_pos = jnp.where(
+        jnp.arange(S)[None] < np.asarray(pos)[:, None],
+        jnp.arange(S)[None], -1,
+    ).astype(jnp.int32)
+    q_pos = (np.asarray(pos)[:, None]
+             + np.arange(R_)[None]).astype(np.int32)
+    return q, k, v, kv_pos, jnp.asarray(q_pos)
+
+
+@pytest.mark.parametrize("pos", [[0, 1], [5, 64], [37, 13]])
+def test_flash_decode_invalid_rows_inert(pos):
+    """Property: kv_pos=-1 slots NEVER contribute — poisoning their K/V
+    with huge values must not change any query row that has at least one
+    valid slot (bitwise: the poisoned lanes hit -inf before the softmax
+    either way). A row with ZERO valid slots keeps garbage in its raw
+    partials BY DESIGN: its ``m`` comes back as the -inf sentinel, which
+    zeroes the whole cache half in the downstream logsumexp merge (the
+    staged half always sees its own diagonal) — the exact contract the
+    paged gather relies on for unallocated pages."""
+    B, KV, R_, hd, S = 2, 2, 4, 64, 64
+    q, k, v, kv_pos, q_pos = _mk_partial(B, KV, R_, hd, S, 7, pos)
+    acc0, m0, l0 = flash_decode_partial(q, k, v, kv_pos, q_pos, block_s=32)
+    bad = jnp.where((kv_pos < 0)[:, None, :, None], 1e4, 0.0)
+    acc1, m1, l1 = flash_decode_partial(
+        q, k + bad, v + bad, kv_pos, q_pos, block_s=32)
+    has_valid = (jnp.asarray(pos) > 0)[:, None, None]   # any committed slot
+    assert bool(jnp.all(jnp.where(has_valid, m0 == m1, True)))
+    assert bool(jnp.all(jnp.where(has_valid, l0 == l1, True)))
+    assert bool(jnp.all(jnp.where(has_valid[..., None], acc0 == acc1, True)))
+    # all-invalid rows: the -inf sentinel that guarantees zero merge weight
+    assert bool(jnp.all(jnp.where(~has_valid, m1 <= -1e30, True)))
+    base = _norm(acc0, m0, l0)
+    ref = _dense_oracle(q, k, v, kv_pos, q_pos)
+    ok = np.asarray(jnp.broadcast_to(has_valid[..., None], ref.shape))
+    np.testing.assert_allclose(np.asarray(base)[ok], np.asarray(ref)[ok],
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_ring_wraparound():
+    """Ring-buffer semantics: kv_pos carries ABSOLUTE positions that wrap
+    modulo the window, so a scrambled (rolled) storage order with matching
+    kv_pos must give the same output as the sorted order."""
+    B, KV, R_, hd, S = 1, 2, 2, 64, 64
+    window = S
+    pos0 = 90                                   # wrapped: slot i holds
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, KV, R_, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), jnp.float32)
+    # ring layout: slot i holds absolute position (pos0 - window) + ...
+    abs_pos = (pos0 - window + (jnp.arange(S) - pos0 % S) % S + S) % (10 * S)
+    abs_pos = jnp.where(abs_pos < pos0, abs_pos, -1).astype(jnp.int32)[None]
+    q_pos = jnp.asarray([[pos0, pos0 + 1]], jnp.int32)
+    out_ring = _norm(*flash_decode_partial(
+        q, k, v, abs_pos, q_pos, kind="window", window=window, block_s=32))
+    # sorted layout: same (position, K, V) association, rolled into order
+    order = jnp.argsort(jnp.where(abs_pos[0] < 0, 10**6, abs_pos[0]))
+    out_sorted = _norm(*flash_decode_partial(
+        q, jnp.take(k, order, 2), jnp.take(v, order, 2),
+        jnp.take(abs_pos, order, 1), q_pos,
+        kind="window", window=window, block_s=32))
+    np.testing.assert_allclose(np.asarray(out_ring), np.asarray(out_sorted),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("kind,window,sink",
+                         [("causal", 0, 0), ("window", 24, 0),
+                          ("streaming", 16, 4)])
+def test_flash_decode_paged_matches_dense(kind, window, sink):
+    """The paged kernel (scalar-prefetched page table in the index_maps)
+    is BITWISE the dense kernel on the gathered view — including a
+    scrambled table, an unallocated (-1) tail and a partial tail page."""
+    B, KV, R_, hd, P, n_pp = 2, 2, 4, 64, 16, 4
+    S = n_pp * P
+    NP = B * n_pp + 2
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(NP)
+    tbl = np.full((B, n_pp), -1, np.int32)
+    tbl[0] = perm[:n_pp]
+    tbl[1, :3] = perm[n_pp:n_pp + 3]            # slot 1: unallocated tail
+    pos = [S - 7, 2 * P + 5]                    # partial tail pages
+    q, _, _, kv_pos, q_pos = _mk_partial(B, KV, R_, hd, S, 5, pos)
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    pool_k = jax.random.normal(ks[0], (NP, KV, P, hd), jnp.float32)
+    pool_v = jax.random.normal(ks[1], (NP, KV, P, hd), jnp.float32)
+    k_dense = R.ref_paged_gather(pool_k, jnp.asarray(tbl))
+    v_dense = R.ref_paged_gather(pool_v, jnp.asarray(tbl))
+    ap, mp, lp = flash_decode_paged_partial(
+        q, pool_k, pool_v, jnp.asarray(tbl), kv_pos, q_pos,
+        kind=kind, window=window, sink=sink)
+    ad, md, ld = flash_decode_partial(
+        q, k_dense, v_dense, kv_pos, q_pos,
+        kind=kind, window=window, sink=sink, block_s=P)
+    assert bool(jnp.all(ap == ad) and jnp.all(mp == md) and jnp.all(lp == ld))
+
+
 @pytest.mark.parametrize("M,K,N", [(8, 16, 8), (100, 200, 300), (128, 128, 128), (1, 512, 64)])
 def test_int8_matmul_matches_oracle(M, K, N):
     k1, k2 = jax.random.split(jax.random.PRNGKey(1))

@@ -1,0 +1,349 @@
+"""Block-paged KV serving is LOSSLESS and keeps the dispatch discipline.
+
+The paged cache is a placement decision, never a numerical one: attention
+gathers pool pages through the slot's page table into exactly the dense
+layout, and the `kv_pos` invalid-position masking (pinned at the kernel
+level in test_kernels.py) makes unallocated / partial-tail pages inert.
+So every server mode must produce TOKEN-IDENTICAL output on a paged build
+— greedy and sampled — and the compiled round must stay one donated
+executable with zero steady-state host syncs (PR 6 contracts hold on the
+paged executables, not just the dense ones).
+
+Chunked prefill (``prefill_chunk>0``) changes WHEN a prompt's tokens are
+consumed, not WHAT the model computes on them: streams are per-slot
+prefix-identical to the dense server (they lag by the prefill rounds),
+and decoding slots keep producing tokens while a long prompt chunks in —
+the non-blocking-admission property the feature exists for.
+
+The mesh test runs in a SUBPROCESS (forced 8-device CPU mesh) like
+test_server_sharded.py: the paged pool replicates over ``data``, shards
+KV heads over ``model``, and the page table rides the batch axis — token
+identity and the single-donated-dispatch contract must survive both.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import server_round_contracts
+from repro.config import get_config
+from repro.core.dsia import layer_sparsity
+from repro.models import model as M
+from repro.serving.sampler import SamplingParams
+from repro.serving.server import BatchedSpecServer
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+SPEC = layer_sparsity(CFG, 0.5)
+
+MODES = ["chain_fused", "legacy", "tree_fused", "cascade_fused"]
+
+_rng = np.random.default_rng(3)
+PROMPTS = [_rng.integers(2, CFG.vocab_size, size=n).astype(np.int32)
+           for n in (8, 19)]
+
+
+def _server(mode, paged, **kw):
+    kwargs = dict(max_batch=2, max_len=128, draft_k=4, tree_expansions=3,
+                  adaptive=True, min_obs=1, donate=True)
+    if mode != "cascade_fused":
+        kwargs["draft_spec"] = SPEC
+    if paged:
+        # page_size chosen to force multi-page slots AND a partial tail
+        # page for the 19-token prompt
+        kwargs.update(paged=True, page_size=16)
+    kwargs.update(kw)
+    return BatchedSpecServer(CFG, PARAMS, mode=mode, **kwargs)
+
+
+def _run(srv, rounds, prompts=PROMPTS, sampling=None):
+    for i, p in enumerate(prompts):
+        if sampling is not None:
+            srv.add_request(i, p, sampling=sampling)
+        else:
+            srv.add_request(i, p)
+    gen = {i: [] for i in range(len(prompts))}
+    for _ in range(rounds):
+        for b, t in srv.step().items():
+            gen[b].extend(t)
+    for b, t in srv.flush().items():
+        gen[b].extend(t)
+    return gen
+
+
+# ------------------------------------------------------------ losslessness
+@pytest.mark.parametrize("mode", MODES)
+def test_paged_token_identity_greedy(mode):
+    """Every mode, greedy: the paged build routes the EXACT dense streams."""
+    dense = _run(_server(mode, paged=False), rounds=5)
+    paged = _run(_server(mode, paged=True), rounds=5)
+    assert sum(len(v) for v in dense.values()) > 0
+    assert paged == dense, f"{mode}: paged streams diverged from dense"
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_paged_token_identity_sampled(mode):
+    """Every mode, seeded stochastic verify: same tokens, same key walk.
+
+    ``adaptive=False``: the DyTC planner sizes draft trees from WALL-CLOCK
+    cost EMAs, so two adaptive servers only consume their sampling keys in
+    lockstep when their dispatch timings agree — a bitwise dense-vs-paged
+    comparison must pin the plan (greedy streams are plan-invariant, so the
+    greedy test above keeps the adaptive path covered). Same reasoning as
+    test_sampled_serving.py."""
+    sp = SamplingParams(temperature=0.9, top_k=40, seed=11)
+    dense = _run(_server(mode, paged=False, adaptive=False, sampling=sp),
+                 rounds=5)
+    paged = _run(_server(mode, paged=True, adaptive=False, sampling=sp),
+                 rounds=5)
+    assert sum(len(v) for v in dense.values()) > 0
+    assert paged == dense, f"{mode}: sampled paged streams diverged"
+
+
+def test_paged_partial_tail_and_table_reuse():
+    """Slot release returns pages to the pool; a later admission reusing
+    those (now differently ordered) physical pages still reproduces the
+    dense streams — physical page identity is invisible to the model."""
+    srv = _server("chain_fused", paged=True)
+    ref = _run(_server("chain_fused", paged=False), rounds=4)
+    first = _run(srv, rounds=4)
+    assert first == ref
+    for s in range(len(PROMPTS)):
+        srv.release(s)
+    again = _run(srv, rounds=4)
+    assert again == ref, "page reuse after release changed the streams"
+
+
+# ------------------------------------------------------- dispatch discipline
+@pytest.mark.parametrize("mode,single", [("chain_fused", True),
+                                         ("tree_fused", True),
+                                         ("cascade_fused", False)])
+def test_paged_round_contracts(mode, single):
+    """PR 6 contracts pinned on the PAGED executables: single-mode rounds
+    stay ONE donated dispatch, no executable re-enters the host, and the
+    paged build costs zero extra host syncs over dense."""
+    # adaptive=False for the cascade comparison: the adaptive planner may
+    # skip a level's dispatch (expansions=0) based on wall-clock cost EMAs,
+    # which would make the dense/paged host_syncs comparison timing-luck
+    kw = dict(round_mode="single") if single else dict(adaptive=False)
+    dn = _server(mode, paged=False, **kw)
+    pg = _server(mode, paged=True, **kw)
+    _run(dn, rounds=3)
+    _run(pg, rounds=3)
+    assert pg.stats["round_dispatches"] == dn.stats["round_dispatches"]
+    assert pg.stats["host_syncs"] == dn.stats["host_syncs"]
+    cons = server_round_contracts(pg)
+    for c in cons.values():
+        c.assert_no_host_callbacks()
+    if single:
+        cons["round"].assert_donated()
+
+
+# ------------------------------------------------------------- page pool
+def test_page_pool_budget_and_exhaustion():
+    """``max_new_tokens`` shrinks a slot's page allocation below the full
+    max_len reservation; an undersized pool fails loudly at admission."""
+    srv = _server("chain_fused", paged=True)
+    full = srv._pages_per_slot
+    srv.add_request(0, PROMPTS[0], max_new_tokens=4)
+    assert 0 < len(srv._slot_pages[0]) < full
+    srv.release(0)
+    assert len(srv._free_pages) == 2 * full
+    # pool with a single page: a multi-page prompt cannot be admitted
+    tiny = _server("chain_fused", paged=True, num_pages=1)
+    with pytest.raises(RuntimeError, match="page pool"):
+        tiny.add_request(0, PROMPTS[1])
+
+
+def test_paged_rejects_unpageable_builds():
+    with pytest.raises(ValueError):
+        _server("chain_fused", paged=True, page_size=48)  # 128 % 48 != 0
+    with pytest.raises(ValueError):
+        BatchedSpecServer(CFG, PARAMS, draft_spec=SPEC,
+                          prefill_chunk=8)  # chunked requires paged
+
+
+# -------------------------------------------------------- chunked prefill
+@pytest.mark.parametrize("mode", ["chain_fused", "tree_fused"])
+def test_chunked_prefill_prefix_parity(mode):
+    """Chunked streams are per-slot PREFIXES of the dense streams: the
+    round dispatch consumes the prompt `prefill_chunk` tokens at a time,
+    so tokens lag by the prefill rounds but never differ."""
+    dense = _run(_server(mode, paged=False), rounds=5)
+    chunk = _run(_server(mode, paged=True, prefill_chunk=8), rounds=8)
+    for s, ref in dense.items():
+        got = chunk[s]
+        n = min(len(ref), len(got))
+        assert n > 2, f"{mode} slot {s}: chunked produced almost nothing"
+        assert got[:n] == ref[:n], f"{mode} slot {s}: chunked prefix diverged"
+
+
+def test_chunked_prefill_sampled_prefix_parity():
+    """The chunked path's on-device key split at prompt completion is
+    bit-identical to dense admission's host-side split: seeded sampled
+    streams stay prefix-identical too."""
+    sp = SamplingParams(temperature=0.8, top_k=0, top_p=0.95, seed=5)
+    dense = _run(_server("chain_fused", paged=False, sampling=sp), rounds=5)
+    chunk = _run(_server("chain_fused", paged=True, prefill_chunk=8,
+                         sampling=sp), rounds=8)
+    for s, ref in dense.items():
+        n = min(len(ref), len(chunk[s]))
+        assert n > 2 and chunk[s][:n] == ref[:n], f"slot {s} diverged"
+
+
+def test_chunked_prefill_is_nonblocking():
+    """THE point of chunked prefill: decoding slots keep emitting tokens
+    during the rounds in which a freshly admitted LONG prompt is still
+    consuming its chunks — admission never stalls the batch."""
+    srv = _server("chain_fused", paged=True, prefill_chunk=8,
+                  max_batch=2, max_len=256)
+    long_prompt = _rng.integers(2, CFG.vocab_size, size=100).astype(np.int32)
+    srv.add_request(0, PROMPTS[0])
+    warm = []
+    for _ in range(2):
+        warm.extend(srv.step().get(0, []))
+    # admit the 100-token prompt: 13 chunked rounds before its first token
+    srv.add_request(1, long_prompt)
+    during = {0: [], 1: []}
+    for _ in range(6):
+        for b, t in srv.step().items():
+            during[b].extend(t)
+    assert len(during[0]) >= 4, "short slot stalled during chunked prefill"
+    assert during[1] == [], "long prompt emitted before its prefill finished"
+    after = {0: [], 1: []}
+    for _ in range(16):
+        for b, t in srv.step().items():
+            after[b].extend(t)
+    for b, t in srv.flush().items():
+        after[b].extend(t)
+    assert len(after[1]) > 0, "long prompt never completed its prefill"
+
+
+def test_chunked_prefill_requires_single_round():
+    with pytest.raises(ValueError):
+        _server("legacy", paged=True, prefill_chunk=8)
+    with pytest.raises(ValueError):
+        _server("cascade_fused", paged=True, prefill_chunk=8)
+
+
+# ------------------------------------------------------------ mesh parity
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import dataclasses, json
+    import jax
+    import numpy as np
+    from repro.analysis.contracts import server_round_contracts
+    from repro.config import get_config
+    from repro.core.dsia import layer_sparsity
+    from repro.launch.mesh import make_mesh_compat
+    from repro.models import model as M
+    from repro.serving.sampler import SamplingParams
+    from repro.serving.server import BatchedSpecServer
+
+    CFG = dataclasses.replace(get_config("vicuna-7b").reduced(), num_layers=3)
+    PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+    SPEC = layer_sparsity(CFG, 0.5)
+    MESH = make_mesh_compat((4, 2), ("data", "model"))
+    B, ROUNDS = 4, 5
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, CFG.vocab_size, size=n).astype(np.int32)
+               for n in (8, 19, 6, 10)]
+
+    def run(mode, mesh, paged, sampling=None):
+        # adaptive=False: the legacy/cascade planners consume wall-clock
+        # cost EMAs, so adaptive dispatch counts (and sampled key walks)
+        # only agree between two servers by timing luck — this test pins
+        # parity and contracts, the adaptive path is covered elsewhere
+        kw = dict(max_batch=B, max_len=128, draft_k=4, tree_expansions=3,
+                  adaptive=False, donate=True, sampling=sampling)
+        if mode != "cascade_fused":
+            kw["draft_spec"] = SPEC
+        if paged:
+            kw.update(paged=True, page_size=16)
+        srv = BatchedSpecServer(CFG, PARAMS, mode=mode, mesh=mesh, **kw)
+        for i, p in enumerate(prompts):
+            srv.add_request(i, p)
+        gen = {i: [] for i in range(B)}
+        for _ in range(ROUNDS):
+            for b, t in srv.step().items():
+                gen[b].extend(t)
+        for b, t in srv.flush().items():
+            gen[b].extend(t)
+        return gen, srv
+
+    SP = SamplingParams(temperature=0.9, top_k=40, seed=7)
+    results = {}
+    for mode in ["chain_fused", "legacy", "tree_fused", "cascade_fused"]:
+        sampling = SP if mode == "chain_fused" else None
+        # sampled streams are only reproducible against a dense baseline
+        # on the SAME mesh: resharding reorders the model-axis psum, and
+        # an ulp shift in the logits can cross a sampling threshold
+        # (greedy mesh-vs-single identity is pinned in
+        # test_server_sharded.py, so the greedy legs keep the stronger
+        # single-device dense reference here)
+        g_ref, srv_ref = run(mode, MESH if sampling else None,
+                             paged=False, sampling=sampling)
+        g_pg, srv_pg = run(mode, MESH, paged=True, sampling=sampling)
+        res = {
+            "identical": g_ref == g_pg,
+            "n_tokens": sum(len(v) for v in g_ref.values()),
+            "round_dispatches": [srv_ref.stats["round_dispatches"],
+                                 srv_pg.stats["round_dispatches"]],
+            "host_syncs": [srv_ref.stats["host_syncs"],
+                           srv_pg.stats["host_syncs"]],
+        }
+        cons = server_round_contracts(srv_pg)
+        for c in cons.values():
+            c.assert_no_host_callbacks()
+        if srv_pg.round_mode == "single":
+            con = cons["round"]
+            con.assert_donated().assert_sharding()
+            con.assert_no_collectives("all-to-all")
+            res["sharded_entry_params"] = len(con.sharded_params)
+            res["single_round"] = True
+        else:
+            res["sharded_entry_params"] = max(
+                len(c.sharded_params) for c in cons.values()
+            )
+            res["single_round"] = False
+        results[mode] = res
+    print(json.dumps(results))
+    """
+)
+
+
+@pytest.mark.slow
+def test_paged_sharded_token_identity_and_contracts():
+    """8-device mesh, paged build vs a DENSE build: exact token parity
+    (greedy modes against single-device dense; the sampled chain_fused leg
+    against dense on the same mesh — see the comment in SCRIPT) and the
+    compiled paged round is still one donated, sharded, host-free
+    executable."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert set(res) == set(MODES)
+    for mode, r in res.items():
+        assert r["identical"], f"{mode}: paged-on-mesh tokens diverged"
+        assert r["n_tokens"] > 0, f"{mode}: generated nothing"
+        assert r["round_dispatches"][0] == r["round_dispatches"][1], mode
+        assert r["host_syncs"][0] == r["host_syncs"][1], mode
+        assert r["sharded_entry_params"] > 0, f"{mode}: nothing sharded"
+    for mode in ("chain_fused", "tree_fused"):
+        assert res[mode]["single_round"]
